@@ -1,0 +1,35 @@
+"""Paper Tables 5-6: record-match accuracy between CA and P3SAPP frames."""
+
+from __future__ import annotations
+
+from repro.core.p3sapp import record_match_accuracy, run_conventional, run_p3sapp
+
+from .common import dataset_dirs, emit
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for ds_id, d, gb in dataset_dirs(quick):
+        pa, _ = run_p3sapp([d])
+        ca, _ = run_conventional([d])
+        for field, table in (("title", "table5"), ("abstract", "table6")):
+            acc = record_match_accuracy(ca, pa, field)
+            rows.append({
+                "name": f"{table}_accuracy_{field}",
+                "dataset_id": ds_id,
+                "paper_gb": gb,
+                "conventional": acc["conventional"],
+                "proposed": acc["proposed"],
+                "matching": acc["matching"],
+                "percentage": round(acc["percentage"], 3),
+                "us_per_call": 0,
+            })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("tables56_accuracy", run(quick))
+
+
+if __name__ == "__main__":
+    main()

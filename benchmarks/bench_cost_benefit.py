@@ -1,0 +1,100 @@
+"""Paper Tables 7-8 / Figs. 11,13: cost-benefit vs epochs and the
+time-saving / MTT-per-epoch ratio.
+
+MTT per epoch is MEASURED by training the case-study LSTM summarizer on
+each dataset's cleaned output (one epoch, wall clock), exactly as the
+paper couples preprocessing savings to training cost. Cost benefit uses
+the paper's eq. 8/11: CB = (T_ca - T_pa) / T_ca with T = t_c + n * t_mt.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.p3sapp_summarizer import SMOKE as S2S_CFG
+from repro.core.p3sapp import run_conventional, run_p3sapp
+from repro.data.batching import batches, seq2seq_arrays, train_val_split
+from repro.data.tokenizer import WordTokenizer
+from repro.models.seq2seq import Seq2Seq
+from repro.optim.adamw import AdamW
+
+from .common import dataset_dirs, emit
+
+EPOCH_GRID = (10, 25, 50)
+
+
+def measure_mtt(records: list[dict]) -> tuple[float, int, int]:
+    """Wall-clock one-epoch training time of the case-study model."""
+    tok = WordTokenizer.fit(
+        (r["abstract"] + " " + r["title"] for r in records[:2000]),
+        vocab_size=S2S_CFG.vocab_size,
+    )
+    arrs = seq2seq_arrays(records, tok, S2S_CFG.max_abstract_len, S2S_CFG.max_title_len)
+    train, val = train_val_split(arrs, 0.1)
+    model = Seq2Seq(S2S_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, state, _ = opt.update(grads, state, params)
+        return params, state, loss
+
+    bs = list(batches(train, 32, seed=0))
+    # warmup compile outside the timed epoch
+    params, state, _ = step(params, state, bs[0])
+    t0 = time.perf_counter()
+    for b in bs:
+        params, state, _ = step(params, state, b)
+    jax.block_until_ready(params)
+    mtt = time.perf_counter() - t0
+    return mtt, len(train["encoder_tokens"]), len(val["encoder_tokens"])
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for ds_id, d, gb in dataset_dirs(quick):
+        pa_records, tp = run_p3sapp([d])
+        _, tc = run_conventional([d])
+        mtt, n_train, n_val = measure_mtt(pa_records)
+        saving = tc.cumulative - tp.cumulative
+        # Table 8
+        rows.append({
+            "name": "table8_mtt_ratio",
+            "dataset_id": ds_id,
+            "paper_gb": gb,
+            "n_train": n_train,
+            "n_val": n_val,
+            "mtt_per_epoch_s": round(mtt, 3),
+            "time_saving_s": round(saving, 3),
+            "ratio_saving_over_mtt": round(saving / mtt, 3),
+            "us_per_call": round(mtt * 1e6, 1),
+        })
+        # Table 7
+        for n_epochs in EPOCH_GRID:
+            t_ca = tc.cumulative + n_epochs * mtt
+            t_pa = tp.cumulative + n_epochs * mtt
+            rows.append({
+                "name": "table7_cost_benefit",
+                "dataset_id": ds_id,
+                "paper_gb": gb,
+                "epochs": n_epochs,
+                "t_ca_s": round(t_ca, 3),
+                "t_pa_s": round(t_pa, 3),
+                "cost_benefit_pct": round(100 * (t_ca - t_pa) / t_ca, 3),
+                "us_per_call": 0,
+            })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("tables78_cost_benefit", run(quick))
+
+
+if __name__ == "__main__":
+    main()

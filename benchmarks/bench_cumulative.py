@@ -1,0 +1,51 @@
+"""Paper Table 4 / Figs. 9-10: cumulative (ingestion+preprocessing) time
+with trend-line slopes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.p3sapp import run_conventional, run_p3sapp
+
+from .common import dataset_dirs, emit
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    xs, ca_ys, pa_ys = [], [], []
+    for ds_id, d, gb in dataset_dirs(quick):
+        _, tp = run_p3sapp([d], optimize=False)
+        _, tc = run_conventional([d])
+        xs.append(gb)
+        ca_ys.append(tc.cumulative)
+        pa_ys.append(tp.cumulative)
+        rows.append({
+            "name": "table4_cumulative",
+            "dataset_id": ds_id,
+            "paper_gb": gb,
+            "ca_s": round(tc.cumulative, 4),
+            "p3sapp_s": round(tp.cumulative, 4),
+            "reduction_pct": round(100 * (1 - tp.cumulative / tc.cumulative), 3),
+            "us_per_call": round(tp.cumulative * 1e6, 1),
+        })
+    if len(xs) >= 2:
+        ca_slope = float(np.polyfit(xs, ca_ys, 1)[0])
+        pa_slope = float(np.polyfit(xs, pa_ys, 1)[0])
+        rows.append({
+            "name": "fig10_trendline",
+            "dataset_id": "slope",
+            "paper_gb": "-",
+            "ca_s": round(ca_slope, 4),
+            "p3sapp_s": round(pa_slope, 4),
+            "reduction_pct": round(ca_slope / max(pa_slope, 1e-9), 2),
+            "us_per_call": 0,
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("table4_cumulative", run(quick))
+
+
+if __name__ == "__main__":
+    main()

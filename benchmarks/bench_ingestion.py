@@ -1,0 +1,45 @@
+"""Paper Table 2 / Fig. 7: ingestion time, CA vs P3SAPP."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import conventional as ca
+from repro.core import ingest as ing
+
+from .common import dataset_dirs, emit
+
+FIELDS = ("title", "abstract")
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for ds_id, d, gb in dataset_dirs(quick):
+        t0 = time.perf_counter()
+        frame = ing.ingest([d], FIELDS)
+        t_pa = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rf = ca.ingest_conventional([d], FIELDS)
+        t_ca = time.perf_counter() - t0
+
+        assert len(frame) == len(rf)
+        rows.append({
+            "name": "table2_ingestion",
+            "dataset_id": ds_id,
+            "paper_gb": gb,
+            "rows": len(frame),
+            "ca_s": round(t_ca, 4),
+            "p3sapp_s": round(t_pa, 4),
+            "reduction_pct": round(100 * (1 - t_pa / t_ca), 3),
+            "us_per_call": round(t_pa * 1e6, 1),
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("table2_ingestion", run(quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Kernel microbenchmarks: interpret-mode correctness timing + analytic
+TPU roofline estimates per kernel (the container has no TPU; wall-clock
+here measures the jnp reference path, the roofline numbers are the
+model for the target hardware)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+from repro.kernels.rg_lru.ref import rg_lru_ref
+from repro.kernels.text_clean.ref import text_clean_ref
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: b=1, h=8, s=1024, d=64
+    b, h, s, d = 1, 8, 1024, 64
+    q = jax.random.normal(key, (b * h, s, d), jnp.float32)
+    f = jax.jit(lambda q: flash_attention_ref(q, q, q, n_q_heads=h, n_kv_heads=h))
+    t = _time(f, q)
+    flops = 4 * b * h * s * s * d  # QK^T + PV
+    bytes_ = 4 * (3 * b * h * s * d + b * h * s * d)
+    rows.append({
+        "name": "kernel_flash_attention", "us_per_call": round(t * 1e6, 1),
+        "tpu_compute_us": round(flops / PEAK_FLOPS * 1e6, 2),
+        "tpu_memory_us": round(bytes_ / HBM_BW * 1e6, 2),
+        "arithmetic_intensity": round(flops / bytes_, 1),
+        "bound": "compute" if flops / PEAK_FLOPS > bytes_ / HBM_BW else "memory",
+    })
+
+    # rg_lru: b=4, s=2048, d=1024 — memory bound by construction
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 2048, 1024)))
+    bb = jax.random.normal(key, (4, 2048, 1024)) * 0.1
+    f = jax.jit(rg_lru_ref)
+    t = _time(f, a, bb)
+    n = a.size
+    flops = 3 * n
+    bytes_ = 4 * 3 * n
+    rows.append({
+        "name": "kernel_rg_lru", "us_per_call": round(t * 1e6, 1),
+        "tpu_compute_us": round(flops / PEAK_FLOPS * 1e6, 2),
+        "tpu_memory_us": round(bytes_ / HBM_BW * 1e6, 2),
+        "arithmetic_intensity": round(flops / bytes_, 2),
+        "bound": "memory",
+    })
+
+    # lstm_cell: b=256, d=512, h=512
+    bsz, din, hid = 256, 512, 512
+    x = jax.random.normal(key, (bsz, din))
+    hh = jax.random.normal(key, (bsz, hid))
+    cc = jax.random.normal(key, (bsz, hid))
+    wx = jax.random.normal(key, (din, 4, hid)) * 0.05
+    wh = jax.random.normal(key, (hid, 4, hid)) * 0.05
+    bias = jnp.zeros((4, hid))
+    f = jax.jit(lstm_cell_ref)
+    t = _time(f, x, hh, cc, wx, wh, bias)
+    flops = 2 * bsz * (din + hid) * 4 * hid
+    bytes_ = 4 * (x.size + hh.size + cc.size + wx.size + wh.size + 2 * bsz * hid)
+    rows.append({
+        "name": "kernel_lstm_cell", "us_per_call": round(t * 1e6, 1),
+        "tpu_compute_us": round(flops / PEAK_FLOPS * 1e6, 2),
+        "tpu_memory_us": round(bytes_ / HBM_BW * 1e6, 2),
+        "arithmetic_intensity": round(flops / bytes_, 1),
+        "bound": "compute" if flops / PEAK_FLOPS > bytes_ / HBM_BW else "memory",
+    })
+
+    # mlstm_chunk: BH=8, s=1024, dh=64, chunk=64
+    from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+
+    bhx, sx, dhx = 8, 1024, 64
+    qm = jax.random.normal(key, (bhx, sx, dhx)) * 0.5
+    gm = jax.random.normal(key, (bhx, sx))
+    f = jax.jit(mlstm_chunk_ref)
+    t = _time(f, qm, qm, qm, gm, gm + 2.0)
+    # per chunk: (L,dh)@(dh,dh) inter + (L,L)@(L,dh) intra (+ scores)
+    L = 64
+    n_chunks = sx // L
+    flops = bhx * n_chunks * (2 * L * dhx * dhx + 2 * 2 * L * L * dhx)
+    bytes_ = 4 * (4 * bhx * sx * dhx + 2 * bhx * sx)  # qkv+h streams + gates
+    rows.append({
+        "name": "kernel_mlstm_chunk", "us_per_call": round(t * 1e6, 1),
+        "tpu_compute_us": round(flops / PEAK_FLOPS * 1e6, 2),
+        "tpu_memory_us": round(bytes_ / HBM_BW * 1e6, 2),
+        "arithmetic_intensity": round(flops / bytes_, 1),
+        "bound": "compute" if flops / PEAK_FLOPS > bytes_ / HBM_BW else "memory",
+    })
+
+    # text_clean: 4096 rows x 512 bytes
+    mat = jnp.asarray(np.random.randint(32, 127, (4096, 512), dtype=np.uint8))
+    f = jax.jit(text_clean_ref)
+    t = _time(f, mat)
+    bytes_ = mat.size * 2
+    rows.append({
+        "name": "kernel_text_clean", "us_per_call": round(t * 1e6, 1),
+        "tpu_compute_us": 0.0,
+        "tpu_memory_us": round(bytes_ / HBM_BW * 1e6, 2),
+        "arithmetic_intensity": 0.5,
+        "bound": "memory",
+        "host_mb_per_s": round(mat.size / t / 1e6, 1),
+    })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("kernel_bench", run())
+
+
+if __name__ == "__main__":
+    main()

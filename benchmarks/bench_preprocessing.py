@@ -1,0 +1,42 @@
+"""Paper Table 3 / Fig. 8: preprocessing time (pre-clean/clean/post-clean),
+CA vs P3SAPP, plus the beyond-paper fused executor."""
+
+from __future__ import annotations
+
+from repro.core.p3sapp import run_conventional, run_p3sapp
+
+from .common import dataset_dirs, emit
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    for ds_id, d, gb in dataset_dirs(quick):
+        _, tp = run_p3sapp([d], optimize=False)  # paper-faithful executor
+        _, tf = run_p3sapp([d], optimize=True)  # beyond-paper fused
+        _, tc = run_conventional([d])
+        rows.append({
+            "name": "table3_preprocessing",
+            "dataset_id": ds_id,
+            "paper_gb": gb,
+            "ca_preclean_s": round(tc.pre_cleaning, 4),
+            "pa_preclean_s": round(tp.pre_cleaning, 4),
+            "ca_clean_s": round(tc.cleaning, 4),
+            "pa_clean_s": round(tp.cleaning, 4),
+            "ca_postclean_s": round(tc.post_cleaning, 4),
+            "pa_postclean_s": round(tp.post_cleaning, 4),
+            "ca_total_s": round(tc.preprocessing, 4),
+            "pa_total_s": round(tp.preprocessing, 4),
+            "pa_fused_total_s": round(tf.preprocessing, 4),
+            "reduction_pct": round(100 * (1 - tp.preprocessing / tc.preprocessing), 3),
+            "fused_reduction_pct": round(100 * (1 - tf.preprocessing / tc.preprocessing), 3),
+            "us_per_call": round(tp.preprocessing * 1e6, 1),
+        })
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    emit("table3_preprocessing", run(quick))
+
+
+if __name__ == "__main__":
+    main()

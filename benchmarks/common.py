@@ -1,0 +1,59 @@
+"""Shared benchmark scaffolding: scaled dataset series + result helpers.
+
+The paper's five datasets are 4.18/8.54/13.34/18.23/23.58 GB. This CPU
+container scales the series by 1000x (MB instead of GB) preserving the
+ratios — the CA-vs-P3SAPP asymptotics (copy-on-append ingestion, row-loop
+cleaning) are size-independent, so the qualitative claims reproduce at
+container scale. Generated corpora are cached under /tmp.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import json
+import sys
+from pathlib import Path
+
+from repro.data.synthetic import write_corpus
+
+# paper dataset sizes (GB) scaled to bytes at 1/1000
+PAPER_SIZES_GB = [4.18, 8.54, 13.34, 18.23, 23.58]
+SCALE = 1_000_000  # bytes per paper-GB => MB-scale series
+RESULTS_DIR = Path(__file__).parent / "results"
+
+
+def dataset_dirs(quick: bool = False) -> list[tuple[int, Path, float]]:
+    """[(dataset_id, directory, paper_gb)]; generated once, cached."""
+    base = Path("/tmp/p3sapp_corpora")
+    out = []
+    sizes = PAPER_SIZES_GB[:2] if quick else PAPER_SIZES_GB
+    for i, gb in enumerate(sizes, start=1):
+        d = base / f"ds{i}"
+        marker = d / ".complete"
+        if not marker.exists():
+            write_corpus(d, total_bytes=int(gb * SCALE), n_files=6 + 2 * i, seed=100 + i)
+            marker.write_text("ok")
+        out.append((i, d, gb))
+    return out
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Write CSV to results/ and the required name,us_per_call,derived lines
+    to stdout."""
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    if rows:
+        fieldnames: list[str] = []
+        for r in rows:  # union of keys, first-seen order (rows may vary)
+            for k in r:
+                if k not in fieldnames:
+                    fieldnames.append(k)
+        path = RESULTS_DIR / f"{name}.csv"
+        with open(path, "w", newline="") as fh:
+            w = csv.DictWriter(fh, fieldnames=fieldnames, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    for r in rows:
+        us = r.get("us_per_call", r.get("p3sapp_s", 0) and r["p3sapp_s"] * 1e6)
+        derived = {k: v for k, v in r.items() if k not in ("name",)}
+        print(f"{name},{us},{json.dumps(derived, default=str)}")

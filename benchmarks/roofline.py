@@ -1,0 +1,108 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json (produced by
+repro.launch.dryrun) and derives per cell:
+
+    t_compute    = flops_per_device / 197 TFLOP/s          (bf16 MXU)
+    t_memory     = bytes_per_device / 819 GB/s             (HBM)
+    t_collective = coll_bytes_per_device / 50 GB/s         (ICI per link)
+
+flops/bytes/collective bytes are the trip-count-aware per-device numbers
+from repro.launch.hlo_cost (see its docstring for the byte model).
+The usefulness ratio is MODEL_FLOPS / (flops_per_device × chips).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+DRYRUN_DIR = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    out = []
+    for p in sorted((DRYRUN_DIR / mesh).glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    hc = rec.get("hlo_cost", {})
+    flops = hc.get("flops", 0.0)
+    bytes_ = hc.get("bytes", 0.0)
+    coll = hc.get("collective_total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / ICI_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])[0]
+    useful = rec.get("model_flops", 0.0) / max(flops * chips, 1.0)
+    bound_time = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "ok": rec.get("ok", False),
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "useful_ratio": useful,
+        "roofline_fraction": (t_c / bound_time) if bound_time > 0 else 0.0,
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_,
+        "coll_per_dev": coll,
+        "collective_breakdown": hc.get("collective_bytes", {}),
+        "error": rec.get("error"),
+    }
+
+
+def table(mesh: str = "single") -> list[dict]:
+    return [roofline_row(r) for r in load_cells(mesh)]
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "useful | roofline_frac |\n|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r["ok"]:
+            body += f"| {r['arch']} | {r['shape']} | FAILED: {str(r['error'])[:60]} |  |  |  |  |  |\n"
+            continue
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} ms | "
+            f"{r['t_memory_s']*1e3:.1f} ms | {r['t_collective_s']*1e3:.1f} ms | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |\n"
+        )
+    return hdr + body
+
+
+def main(quick: bool = False) -> None:
+    from .common import emit
+
+    rows = []
+    for mesh in ("single", "multi"):
+        if not (DRYRUN_DIR / mesh).exists():
+            continue
+        for r in table(mesh):
+            rows.append({
+                "name": f"roofline_{mesh}",
+                "arch": r["arch"], "shape": r["shape"], "ok": r["ok"],
+                "t_compute_ms": round(r["t_compute_s"] * 1e3, 2),
+                "t_memory_ms": round(r["t_memory_s"] * 1e3, 2),
+                "t_collective_ms": round(r["t_collective_s"] * 1e3, 2),
+                "dominant": r["dominant"],
+                "useful_ratio": round(r["useful_ratio"], 3),
+                "roofline_fraction": round(r["roofline_fraction"], 3),
+                "us_per_call": 0,
+            })
+    emit("roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

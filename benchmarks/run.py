@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV lines and writes
+per-table CSVs to benchmarks/results/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="2 datasets instead of 5")
+    ap.add_argument("--only", default=None, help="comma-separated module names")
+    args = ap.parse_args()
+
+    from . import (
+        bench_accuracy,
+        bench_cost_benefit,
+        bench_cumulative,
+        bench_ingestion,
+        bench_kernels,
+        bench_preprocessing,
+        roofline,
+    )
+
+    modules = {
+        "ingestion": bench_ingestion,
+        "preprocessing": bench_preprocessing,
+        "cumulative": bench_cumulative,
+        "accuracy": bench_accuracy,
+        "cost_benefit": bench_cost_benefit,
+        "kernels": bench_kernels,
+        "roofline": roofline,
+    }
+    if args.only:
+        keep = args.only.split(",")
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    failures = 0
+    for name, mod in modules.items():
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main(quick=args.quick)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end driver (paper case study): title generation from abstracts.
+
+Pipeline: synthetic CORE corpus → P3SAPP preprocessing → tokenizer →
+async double-buffered loader → LSTM seq2seq with Bahdanau attention →
+checkpointed training (resume-capable) → greedy inference samples.
+
+Runs a few hundred steps on CPU by default:
+
+    PYTHONPATH=src python examples/train_summarizer.py --steps 300
+"""
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.p3sapp_summarizer import CONFIG, SMOKE
+from repro.core.async_loader import AsyncLoader
+from repro.core.p3sapp import run_p3sapp
+from repro.data.batching import batches, seq2seq_arrays, train_val_split
+from repro.data.synthetic import write_corpus
+from repro.data.tokenizer import WordTokenizer
+from repro.models.seq2seq import Seq2Seq
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.runtime.fault_tolerance import TrainController
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--corpus-mb", type=float, default=4.0)
+    ap.add_argument("--smoke", action="store_true", help="tiny model config")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = SMOKE if args.smoke else CONFIG
+    corpus = tempfile.mkdtemp(prefix="p3sapp_corpus_")
+    write_corpus(corpus, total_bytes=int(args.corpus_mb * 1e6), n_files=8, seed=1)
+
+    t0 = time.perf_counter()
+    records, timings = run_p3sapp([corpus], optimize=True)
+    print(f"P3SAPP preprocessing: {timings.cumulative:.2f}s, {len(records)} records")
+
+    tok = WordTokenizer.fit(
+        (r["abstract"] + " " + r["title"] for r in records), vocab_size=cfg.vocab_size
+    )
+    arrs = seq2seq_arrays(records, tok, cfg.max_abstract_len, cfg.max_title_len)
+    train, val = train_val_split(arrs, 0.1)
+    print(f"train={len(train['encoder_tokens'])} val={len(val['encoder_tokens'])}")
+
+    model = Seq2Seq(cfg)
+    opt = AdamW(learning_rate=warmup_cosine(3e-3, 20, args.steps), weight_decay=1e-4)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return params, opt.init(params)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="p3sapp_ckpt_")
+    controller = TrainController(ckpt_dir, train_step, init_state, save_every=100)
+    if controller.resumed:
+        print(f"resumed from step {controller.step}")
+
+    def batch_stream():
+        epoch = 0
+        while True:
+            yield from batches(train, args.batch_size, seed=epoch)
+            epoch += 1
+
+    loader = AsyncLoader(batch_stream(), prefetch=2)
+    history = controller.run(iter(loader), n_steps=args.steps)
+    if history:
+        print(f"step {history[0]['step']}: loss={history[0]['loss']:.3f}")
+        print(f"step {history[-1]['step']}: loss={history[-1]['loss']:.3f}")
+
+    # validation loss + greedy samples (paper Algorithm 3)
+    val_loss = float(model.loss(controller.params, {k: jnp.asarray(v[:64]) for k, v in val.items()}))
+    print(f"val loss: {val_loss:.3f}")
+    gen = model.generate(controller.params, val["encoder_tokens"][:3])
+    for i in range(3):
+        print(f"  gold: {tok.decode(val['decoder_tokens'][i])}")
+        print(f"  pred: {tok.decode(np.asarray(gen[i]))}\n")
+    print(f"total wall time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

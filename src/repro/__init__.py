@@ -1,0 +1,4 @@
+"""P3SAPP-JAX: Spark-ML-style preprocessing pipeline + multi-pod JAX
+training framework (reproduction of Khan, Liu, Alam 2019)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,25 @@
+"""HuBERT X-Large — encoder-only audio transformer [arXiv:2106.07447].
+
+Backbone only (assignment): the conv feature-extractor frontend is a stub;
+``input_specs`` provides precomputed 512-d frame embeddings. Targets are
+k-means cluster IDs (vocab 504). Encoder-only => no decode shapes.
+"""
+from . import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    causal=False, rope="none", norm="layernorm", act="gelu", glu=False,
+    frontend="audio", frontend_dim=512,
+    notes="HuBERT uses conv-positional embeddings; stubbed as position-free "
+          "(relative position information is out of scope for the backbone assignment).",
+)
+
+SMOKE = ArchConfig(
+    name="hubert-xlarge-smoke", family="audio",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab_size=32,
+    causal=False, rope="none", norm="layernorm", act="gelu", glu=False,
+    frontend="audio", frontend_dim=24,
+)

@@ -1,0 +1,8 @@
+"""The paper's own case-study model (not part of the assigned 10): LSTM
+seq2seq title generator (see repro.models.seq2seq)."""
+from ..models.seq2seq import Seq2SeqConfig
+
+CONFIG = Seq2SeqConfig(vocab_size=8000, d_embed=128, d_hidden=256,
+                       n_encoder_layers=3, max_abstract_len=128, max_title_len=24)
+SMOKE = Seq2SeqConfig(vocab_size=128, d_embed=16, d_hidden=32,
+                      n_encoder_layers=2, max_abstract_len=24, max_title_len=8)

@@ -1,0 +1,29 @@
+"""The paper's contribution: P3SAPP preprocessing pipeline.
+
+Public API:
+    run_p3sapp / run_conventional  — Algorithm 1 / Algorithm 2 drivers
+    Pipeline, stages               — Spark-ML-style transformer chain
+    ColumnarFrame                  — the DataFrame analogue
+    AsyncLoader / ShardPool        — accelerator-overlap input pipeline
+"""
+
+from .async_loader import AsyncLoader, ShardPool
+from .frame import ColumnarFrame
+from .p3sapp import (
+    StageTimings,
+    case_study_stages,
+    record_match_accuracy,
+    run_conventional,
+    run_p3sapp,
+)
+from .pipeline import Pipeline, PipelineModel
+from .stages import (
+    ConvertToLower,
+    RemoveHTMLTags,
+    RemoveShortWords,
+    RemoveUnwantedCharacters,
+    StopWordsRemover,
+    Tokenizer,
+    abstract_stages,
+    title_stages,
+)

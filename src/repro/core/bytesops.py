@@ -1,0 +1,390 @@
+"""Vectorized byte-level text operations — the columnar execution engine.
+
+This is the TPU-era analogue of Spark's Tungsten columnar execution: every
+preprocessing stage is a handful of C-speed vector passes over a *flat*
+buffer instead of a Python loop per row (the conventional approach,
+Algorithm 2 in the paper).
+
+Flat representation
+-------------------
+A column of ``n`` strings is stored as a single ``uint8`` array in which rows
+are separated by ``ROW_SEP`` (``\\x00``).  Text is treated as ASCII-oriented
+UTF-8 (the paper's corpus is English scholarly text); bytes outside
+``[a-z ]`` are removed by the unwanted-character LUT anyway.
+
+Op descriptors
+--------------
+Stages describe themselves as small *ops* (LUT / SPAN / REPLACE / COLLAPSE /
+WORDPRED).  The executor (``apply_ops``) runs them; ``fuse_ops`` performs
+Catalyst-style adjacent-op fusion:
+
+* ``LUT ∘ LUT``      → one composed 256-entry LUT (one pass instead of two)
+* ``WORDPRED | WORDPRED`` → one word-segmentation + hash pass evaluating the
+  OR of the predicates (exact: predicates are word-local, so removing words
+  in one pass is equivalent to sequential removal)
+* adjacent ``COLLAPSE`` ops deduplicate.
+
+The unfused path is the paper-faithful P3SAPP executor; fusion is a
+beyond-paper optimization measured in EXPERIMENTS.md §Perf (data layer).
+
+Semantics contract (shared with the row-wise oracles in ``stages.py``)
+----------------------------------------------------------------------
+* HTML tags and parentheses are balanced and non-nested within each row
+  (the corpus generator guarantees this; the span mask resets its depth at
+  every row separator so malformed rows can never swallow a separator).
+* ``\\x00`` never appears inside a row (ingestion strips it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+ROW_SEP = 0
+SPACE = 32
+
+# ---------------------------------------------------------------------------
+# flatten / unflatten
+# ---------------------------------------------------------------------------
+
+
+def flatten(rows: Sequence[str]) -> np.ndarray:
+    """Join rows with ROW_SEP into one uint8 buffer (trailing sep included)."""
+    joined = ("\x00".join(rows) + "\x00").encode("utf-8", errors="ignore") if len(rows) else b""
+    return np.frombuffer(joined, dtype=np.uint8).copy()
+
+
+def unflatten(buf: np.ndarray) -> list[str]:
+    """Inverse of :func:`flatten`."""
+    if buf.size == 0:
+        return []
+    parts = buf.tobytes().split(b"\x00")
+    if parts and parts[-1] == b"":
+        parts = parts[:-1]
+    return [p.decode("utf-8", errors="ignore") for p in parts]
+
+
+def n_rows(buf: np.ndarray) -> int:
+    return int((buf == ROW_SEP).sum())
+
+
+# ---------------------------------------------------------------------------
+# Lookup tables
+# ---------------------------------------------------------------------------
+
+LOWER_LUT = np.arange(256, dtype=np.uint8)
+LOWER_LUT[ord("A") : ord("Z") + 1] += 32
+
+# RemoveUnwantedCharacters: keep [a-z], space, ROW_SEP; everything else
+# (digits, punctuation, specials, residual uppercase, UTF-8 >127) → space.
+UNWANTED_LUT = np.full(256, SPACE, dtype=np.uint8)
+UNWANTED_LUT[ord("a") : ord("z") + 1] = np.arange(ord("a"), ord("z") + 1, dtype=np.uint8)
+UNWANTED_LUT[SPACE] = SPACE
+UNWANTED_LUT[ROW_SEP] = ROW_SEP
+
+
+# Contraction mapping: applied on flat bytes after lowercasing, before
+# punctuation stripping; each entry is one C-speed ``bytes.replace`` pass.
+CONTRACTIONS: tuple[tuple[bytes, bytes], ...] = (
+    (b"won't", b"will not"),
+    (b"can't", b"can not"),
+    (b"shan't", b"shall not"),
+    (b"n't", b" not"),
+    (b"'re", b" are"),
+    (b"'ve", b" have"),
+    (b"'ll", b" will"),
+    (b"'m", b" am"),
+    (b"'d", b" would"),
+    (b"'s", b""),
+    (b"'", b""),
+)
+
+
+# ---------------------------------------------------------------------------
+# Character-level passes
+# ---------------------------------------------------------------------------
+
+
+def apply_lut(buf: np.ndarray, lut: np.ndarray) -> np.ndarray:
+    return lut[buf]
+
+
+def span_strip(buf: np.ndarray, open_b: int, close_b: int) -> np.ndarray:
+    """Delete ``open .. close`` spans (both delimiters included).
+
+    Depth resets at every row separator (fast path when rows are balanced).
+    """
+    opens = buf == open_b
+    closes = buf == close_b
+    delta = np.subtract(opens, closes, dtype=np.int8)
+    depth = np.cumsum(delta, dtype=np.int32)
+    sep = buf == ROW_SEP
+    sep_depths = depth[sep]
+    if sep_depths.size and sep_depths.any():  # malformed rows: per-row reset
+        row_id = np.cumsum(sep, dtype=np.int32) - sep
+        start_depth = np.concatenate(([0], sep_depths)).astype(np.int32)[row_id]
+        inside = (depth - start_depth) > 0
+    else:
+        inside = depth > 0  # includes opener, excludes closer
+    keep = ~(inside | closes) | sep
+    return buf[keep]
+
+
+def replace_patterns(buf: np.ndarray, patterns: Sequence[tuple[bytes, bytes]]) -> np.ndarray:
+    raw = buf.tobytes()
+    for pat, rep in patterns:
+        raw = raw.replace(pat, rep)
+    return np.frombuffer(raw, dtype=np.uint8).copy()
+
+
+def expand_contractions(buf: np.ndarray) -> np.ndarray:
+    return replace_patterns(buf, CONTRACTIONS)
+
+
+def collapse_spaces(buf: np.ndarray) -> np.ndarray:
+    """Collapse space runs; strip leading/trailing spaces of each row."""
+    if buf.size == 0:
+        return buf
+    sp = buf == SPACE
+    sep = buf == ROW_SEP
+    prev_sp_or_start = np.empty_like(sp)
+    prev_sp_or_start[0] = True
+    prev_sp_or_start[1:] = sp[:-1] | sep[:-1]
+    buf2 = buf[~(sp & prev_sp_or_start)]
+    sp2 = buf2 == SPACE
+    next_sep = np.empty_like(sp2)
+    next_sep[-1] = True
+    next_sep[:-1] = buf2[1:] == ROW_SEP
+    return buf2[~(sp2 & next_sep)]
+
+
+# ---------------------------------------------------------------------------
+# Word-level passes (segmented vector ops, no per-word Python)
+# ---------------------------------------------------------------------------
+
+
+def _segment_words(buf: np.ndarray):
+    """Return (is_word_byte, word_id_per_byte, start_idx, lengths)."""
+    delim = (buf == SPACE) | (buf == ROW_SEP)
+    isw = ~delim
+    starts = isw.copy()
+    starts[1:] &= delim[:-1]
+    start_idx = np.flatnonzero(starts)
+    wid = np.cumsum(starts, dtype=np.int32) - 1  # valid where isw
+    if start_idx.size:
+        lengths = np.add.reduceat(isw.astype(np.int32), start_idx)
+    else:
+        lengths = np.zeros(0, dtype=np.int32)
+    return isw, wid, start_idx, lengths
+
+
+class WordView:
+    """Lazy per-word key view. ``k1``/``k2`` pack bytes 0-7 / 8-15 of each
+    word (zero padded), so (k1, k2, length) identifies any word of <=16
+    bytes *exactly* — no hash collisions. Words longer than 16 bytes cannot
+    equal any dictionary word of <=16 bytes (length check)."""
+
+    def __init__(self, buf: np.ndarray, start_idx: np.ndarray, lengths: np.ndarray):
+        self._buf = buf
+        self.start_idx = start_idx
+        self.lengths = lengths
+        self._k1: np.ndarray | None = None
+        self._k2: np.ndarray | None = None
+
+    def _pack(self, offset: int, subset: np.ndarray | None = None) -> np.ndarray:
+        starts = self.start_idx if subset is None else self.start_idx[subset]
+        lens = self.lengths if subset is None else self.lengths[subset]
+        pad = np.zeros(8, dtype=np.uint8)
+        bufp = np.concatenate([self._buf, pad])
+        cols = np.arange(8, dtype=np.int64)
+        mat = bufp[starts[:, None] + (offset + cols)[None, :]]
+        mat[cols[None, :] >= (lens[:, None] - offset)] = 0
+        return mat.reshape(-1).view(np.uint64)
+
+    @property
+    def k1(self) -> np.ndarray:
+        if self._k1 is None:
+            self._k1 = self._pack(0)
+        return self._k1
+
+    @property
+    def k2(self) -> np.ndarray:
+        if self._k2 is None:
+            long = np.flatnonzero(self.lengths > 8)
+            k2 = np.zeros(self.start_idx.size, dtype=np.uint64)
+            if long.size:
+                k2[long] = self._pack(8, subset=long)
+            self._k2 = k2
+        return self._k2
+
+
+def pack_word(word: str) -> tuple[int, int, int]:
+    """(k1, k2, length) key of a dictionary word (must be <=16 bytes)."""
+    b = word.encode("utf-8")
+    if len(b) > 16:
+        raise ValueError(f"dictionary word too long: {word!r}")
+    padded = b + b"\x00" * (16 - len(b))
+    k = np.frombuffer(padded, dtype=np.uint64)
+    return int(k[0]), int(k[1]), len(b)
+
+
+class WordSet:
+    """Sorted exact-match set of <=16-byte words (e.g. stopwords)."""
+
+    def __init__(self, words: Sequence[str]):
+        keys = sorted({pack_word(w) for w in words})
+        self.k1 = np.array([k[0] for k in keys], dtype=np.uint64)
+        self.k2 = np.array([k[1] for k in keys], dtype=np.uint64)
+        self.ln = np.array([k[2] for k in keys], dtype=np.int32)
+        self._max_dup = self._compute_max_dup()
+
+    def contains(self, view: WordView) -> np.ndarray:
+        if self.k1.size == 0 or view.start_idx.size == 0:
+            return np.zeros(view.start_idx.size, dtype=bool)
+        k1 = view.k1
+        pos = np.searchsorted(self.k1, k1)
+        # self.k1 can contain duplicates (same first-8 bytes, different tail);
+        # check up to 2 candidate slots — enough for English stopword lists,
+        # asserted at construction time below.
+        hit = np.zeros(k1.size, dtype=bool)
+        for off in range(self._max_dup):
+            p = np.clip(pos + off, 0, self.k1.size - 1)
+            hit |= (
+                (self.k1[p] == k1)
+                & (self.k2[p] == view.k2)
+                & (self.ln[p] == view.lengths)
+            )
+        return hit
+
+    def _compute_max_dup(self) -> int:
+        if self.k1.size < 2:
+            return 1
+        runs = 1
+        best = 1
+        for i in range(1, self.k1.size):
+            runs = runs + 1 if self.k1[i] == self.k1[i - 1] else 1
+            best = max(best, runs)
+        return best
+
+
+def remove_words(
+    buf: np.ndarray,
+    bad_fn: Callable[[WordView | None, np.ndarray], np.ndarray],
+    needs_hashes: bool = True,
+) -> np.ndarray:
+    """Delete words flagged by ``bad_fn(word_view|None, lengths)``."""
+    # Word-level stages always normalize whitespace (Spark operates on token
+    # arrays; our textual form rejoins with single spaces) — so the no-op
+    # paths still collapse.
+    isw, wid, start_idx, lengths = _segment_words(buf)
+    if start_idx.size == 0:
+        return collapse_spaces(buf)
+    view = WordView(buf, start_idx, lengths) if needs_hashes else None
+    bad = bad_fn(view, lengths)
+    if not bad.any():
+        return collapse_spaces(buf)
+    kill = np.zeros(buf.size, dtype=bool)
+    w = np.clip(wid, 0, None)
+    kill[isw] = bad[w[isw]]
+    return collapse_spaces(buf[~kill])
+
+
+def remove_short_words(buf: np.ndarray, threshold: int) -> np.ndarray:
+    return remove_words(buf, lambda v, ln: ln <= threshold, needs_hashes=False)
+
+
+def remove_stopwords(buf: np.ndarray, stopwords: "WordSet") -> np.ndarray:
+    return remove_words(buf, lambda v, ln: stopwords.contains(v))
+
+
+# ---------------------------------------------------------------------------
+# Op descriptors + fusing executor (Catalyst-style plan optimization)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True, eq=False)
+class Op:
+    kind: str  # "lut" | "span" | "replace" | "collapse" | "wordpred"
+    lut: np.ndarray | None = None
+    span: tuple[int, int] | None = None
+    patterns: tuple[tuple[bytes, bytes], ...] | None = None
+    pred: Callable | None = None  # (hashes|None, lengths) -> bool[n_words]
+    needs_hashes: bool = False
+
+
+# Module-level predicates (picklable for the process-pool executor).
+
+
+def pred_short(view, ln, threshold: int):
+    return ln <= threshold
+
+
+def pred_stopword(view, ln, words: "WordSet"):
+    return words.contains(view)
+
+
+def pred_or(view, ln, p1, p2):
+    return p1(view, ln) | p2(view, ln)
+
+
+def lut_op(lut: np.ndarray) -> Op:
+    return Op("lut", lut=lut)
+
+
+def span_op(open_c: str, close_c: str) -> Op:
+    return Op("span", span=(ord(open_c), ord(close_c)))
+
+
+def replace_op(patterns: Sequence[tuple[bytes, bytes]]) -> Op:
+    return Op("replace", patterns=tuple(patterns))
+
+
+def collapse_op() -> Op:
+    return Op("collapse")
+
+
+def wordpred_op(pred: Callable, needs_hashes: bool) -> Op:
+    return Op("wordpred", pred=pred, needs_hashes=needs_hashes)
+
+
+def apply_op(buf: np.ndarray, op: Op) -> np.ndarray:
+    if op.kind == "lut":
+        return apply_lut(buf, op.lut)
+    if op.kind == "span":
+        return span_strip(buf, *op.span)
+    if op.kind == "replace":
+        return replace_patterns(buf, op.patterns)
+    if op.kind == "collapse":
+        return collapse_spaces(buf)
+    if op.kind == "wordpred":
+        return remove_words(buf, op.pred, needs_hashes=op.needs_hashes)
+    raise ValueError(f"unknown op {op.kind}")
+
+
+def apply_ops(buf: np.ndarray, ops: Sequence[Op]) -> np.ndarray:
+    for op in ops:
+        buf = apply_op(buf, op)
+    return buf
+
+
+def fuse_ops(ops: Sequence[Op]) -> list[Op]:
+    """Adjacent-op fusion. Exact: see module docstring."""
+    fused: list[Op] = []
+    for op in ops:
+        prev = fused[-1] if fused else None
+        if prev is not None and prev.kind == op.kind == "lut":
+            fused[-1] = lut_op(op.lut[prev.lut])
+        elif prev is not None and prev.kind == op.kind == "collapse":
+            pass  # idempotent
+        elif prev is not None and prev.kind == op.kind == "wordpred":
+            from functools import partial
+
+            fused[-1] = wordpred_op(
+                partial(pred_or, p1=prev.pred, p2=op.pred),
+                prev.needs_hashes or op.needs_hashes,
+            )
+        else:
+            fused.append(op)
+    return fused

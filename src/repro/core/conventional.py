@@ -1,0 +1,86 @@
+"""Conventional approach (CA) — faithful re-implementation of Algorithm 2.
+
+The paper's CA is the pandas idiom of its era:
+
+* ingest: per file ``pd.read_json`` + ``DataFrame.append`` — **append copies
+  the whole frame** (quadratic growth), which is exactly why the paper's
+  Table 2 CA ingestion blows up super-linearly. pandas is not installed in
+  this container, so ``RowFrame`` reproduces those semantics (copy-on-append
+  row store) with stdlib ``json`` as the parser.
+* cleaning: a Python loop over rows applying the row-wise cleaning functions
+  (the same oracles the P3SAPP stages are validated against — Algorithm 2
+  steps 11-13).
+
+This module exists as the measured baseline for benchmarks/bench_* and as
+the reference for the record-match accuracy study (paper Tables 5-6).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Sequence
+
+from .ingest import list_shards
+from .stages import Stage
+
+
+class RowFrame:
+    """pandas-era DataFrame emulation: copy-on-append row store."""
+
+    def __init__(self, rows: list[dict] | None = None):
+        self.rows: list[dict] = rows if rows is not None else []
+
+    def append(self, other: "RowFrame") -> "RowFrame":
+        # pd.DataFrame.append returned a NEW frame, copying both inputs.
+        return RowFrame([dict(r) for r in self.rows] + [dict(r) for r in other.rows])
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+def ingest_conventional(
+    directories: Sequence[str | Path], fields: Sequence[str] = ("title", "abstract")
+) -> RowFrame:
+    """Algorithm 2 steps 1-8."""
+    data = RowFrame()
+    for path in list_shards(directories):
+        rows = []
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                rows.append({f: rec.get(f) for f in fields})
+        data = data.append(RowFrame(rows))
+    return data
+
+
+def pre_clean_conventional(frame: RowFrame, fields: Sequence[str]) -> RowFrame:
+    """Algorithm 2 steps 9-10: drop nulls, drop duplicates (keep first)."""
+    out: list[dict] = []
+    seen: set = set()
+    for r in frame.rows:
+        if any(r.get(f) is None or r.get(f) == "" for f in fields):
+            continue
+        key = tuple(r.get(f) for f in fields)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(r)
+    return RowFrame(out)
+
+
+def clean_conventional(frame: RowFrame, stages: Sequence[Stage]) -> RowFrame:
+    """Algorithm 2 steps 11-13: FOR all rows, perform text cleaning."""
+    for st in stages:
+        for r in frame.rows:
+            val = r.get(st.input_col) or ""
+            r[st.output_col] = st.transform_row(val)
+    return frame
+
+
+def post_clean_conventional(frame: RowFrame, fields: Sequence[str]) -> RowFrame:
+    """Algorithm 2 step 14: remove rows that became NULL/empty."""
+    return RowFrame([r for r in frame.rows if all(r.get(f) for f in fields)])

@@ -1,0 +1,72 @@
+"""P3SAPP data ingestion (paper Algorithm 1, steps 1-10).
+
+Spark-SQL-JSON analogue: every shard file is parsed straight into columnar
+buffers (orjson → object arrays), shards are unioned columnar-cheaply, and
+the pre-cleaning steps (null drop, dedup) are frame-level vector ops.
+
+File-level parallelism (Spark partitions == files) is exposed through a
+process pool; on this 1-core container it degrades gracefully to serial.
+"""
+
+from __future__ import annotations
+
+import os
+from concurrent.futures import ProcessPoolExecutor
+from pathlib import Path
+from typing import Iterable, Sequence
+
+import numpy as np
+import orjson
+
+from .frame import ColumnarFrame
+
+
+def _parse_file(args) -> dict[str, list]:
+    path, fields = args
+    cols: dict[str, list] = {f: [] for f in fields}
+    with open(path, "rb") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = orjson.loads(line)
+            for f in fields:
+                cols[f].append(rec.get(f))
+    return cols
+
+
+def list_shards(directories: Sequence[str | Path]) -> list[Path]:
+    files: list[Path] = []
+    for d in directories:
+        d = Path(d)
+        if d.is_file():
+            files.append(d)
+        else:
+            files.extend(sorted(p for p in d.rglob("*.jsonl") if p.is_file()))
+    return files
+
+
+def ingest(
+    directories: Sequence[str | Path],
+    fields: Sequence[str] = ("title", "abstract"),
+    workers: int = 1,
+) -> ColumnarFrame:
+    """Steps 2-8: read every file of every directory, select fields, union."""
+    files = list_shards(directories)
+    if not files:
+        return ColumnarFrame.empty(fields)
+    jobs = [(str(p), tuple(fields)) for p in files]
+    if workers <= 1:
+        parsed = [_parse_file(j) for j in jobs]
+    else:
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            parsed = list(pool.map(_parse_file, jobs))
+    frames = [
+        ColumnarFrame({f: np.array(c[f], dtype=object) for f in fields}) for c in parsed
+    ]
+    return ColumnarFrame.concat(frames)
+
+
+def pre_clean(frame: ColumnarFrame, subset: Sequence[str] | None = None) -> ColumnarFrame:
+    """Steps 9-10: remove NULL rows, remove duplicates."""
+    return frame.dropna(subset).drop_duplicates(subset)

@@ -1,0 +1,138 @@
+"""End-to-end P3SAPP and CA drivers with the paper's stage-level timing.
+
+Timing attribution follows §3 of the paper exactly:
+
+=============  =======================  =======================
+stage          P3SAPP (Algorithm 1)     CA (Algorithm 2)
+=============  =======================  =======================
+ingestion      steps 2-8                steps 2-8
+pre-cleaning   steps 9-10               steps 9-10
+cleaning       steps 11-14 (pipeline)   steps 11-13 (row loop)
+post-cleaning  steps 15-16 (toPandas)   step 14
+=============  =======================  =======================
+
+``preprocessing = pre_cleaning + cleaning + post_cleaning`` and
+``cumulative = ingestion + preprocessing`` (paper eq. 7).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Sequence
+
+from . import conventional as ca
+from . import ingest as ing
+from .frame import ColumnarFrame
+from .pipeline import Pipeline
+from .stages import Stage, abstract_stages, title_stages
+
+
+@dataclass
+class StageTimings:
+    ingestion: float = 0.0
+    pre_cleaning: float = 0.0
+    cleaning: float = 0.0
+    post_cleaning: float = 0.0
+
+    @property
+    def preprocessing(self) -> float:
+        return self.pre_cleaning + self.cleaning + self.post_cleaning
+
+    @property
+    def cumulative(self) -> float:
+        return self.ingestion + self.preprocessing
+
+    def as_dict(self) -> dict:
+        return {
+            "ingestion": self.ingestion,
+            "pre_cleaning": self.pre_cleaning,
+            "cleaning": self.cleaning,
+            "post_cleaning": self.post_cleaning,
+            "preprocessing": self.preprocessing,
+            "cumulative": self.cumulative,
+        }
+
+
+def case_study_stages(abstract_col: str = "abstract", title_col: str = "title") -> list[Stage]:
+    """Paper Fig. 2 + Fig. 3 workflows chained into one pipeline."""
+    return abstract_stages(abstract_col) + title_stages(title_col)
+
+
+def run_p3sapp(
+    directories: Sequence[str | Path],
+    fields: Sequence[str] = ("title", "abstract"),
+    stages: Sequence[Stage] | None = None,
+    workers: int = 1,
+    optimize: bool = False,
+) -> tuple[list[dict], StageTimings]:
+    """Algorithm 1. Returns (records a.k.a. the pandas frame, timings).
+
+    ``optimize=False`` is the paper-faithful executor; ``optimize=True``
+    enables the beyond-paper fused executor (EXPERIMENTS.md §Perf).
+    """
+    t = StageTimings()
+    stages = list(stages) if stages is not None else case_study_stages()
+
+    t0 = time.perf_counter()
+    frame = ing.ingest(directories, fields, workers=workers)  # steps 2-8
+    t.ingestion = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    frame = ing.pre_clean(frame, fields)  # steps 9-10
+    t.pre_cleaning = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    model = Pipeline(stages).fit(frame)  # steps 11-13
+    frame = model.transform(frame, workers=workers, optimize=optimize)  # step 14
+    t.cleaning = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    records = frame.to_records()  # step 15 (toPandas analogue)
+    records = [r for r in records if all(r.get(f) for f in fields)]  # step 16
+    t.post_cleaning = time.perf_counter() - t0
+    return records, t
+
+
+def run_conventional(
+    directories: Sequence[str | Path],
+    fields: Sequence[str] = ("title", "abstract"),
+    stages: Sequence[Stage] | None = None,
+) -> tuple[list[dict], StageTimings]:
+    """Algorithm 2. Returns (records, timings)."""
+    t = StageTimings()
+    stages = list(stages) if stages is not None else case_study_stages()
+
+    t0 = time.perf_counter()
+    frame = ca.ingest_conventional(directories, fields)  # steps 2-8
+    t.ingestion = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    frame = ca.pre_clean_conventional(frame, fields)  # steps 9-10
+    t.pre_cleaning = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    frame = ca.clean_conventional(frame, stages)  # steps 11-13
+    t.cleaning = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    frame = ca.post_clean_conventional(frame, fields)  # step 14
+    t.post_cleaning = time.perf_counter() - t0
+    return frame.rows, t
+
+
+def record_match_accuracy(
+    ca_records: list[dict], pa_records: list[dict], field: str
+) -> dict:
+    """Paper §5.2: percentage of matching records between the two frames."""
+    ca_vals = [r.get(field) for r in ca_records]
+    pa_vals = set(r.get(field) for r in pa_records)
+    matching = sum(1 for v in ca_vals if v in pa_vals)
+    denom = max(len(ca_records), 1)
+    return {
+        "conventional": len(ca_records),
+        "proposed": len(pa_records),
+        "matching": matching,
+        "percentage": 100.0 * matching / denom,
+    }

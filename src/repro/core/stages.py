@@ -1,0 +1,196 @@
+"""Spark ML Feature–style preprocessing stages (the paper's four new APIs).
+
+Each stage follows the Spark ML ``Transformer`` protocol (``fit`` is identity
+for pure transformers, kept for API fidelity with Spark ``Pipeline.fit``) and
+provides two execution paths:
+
+* ``flat_ops`` / ``transform_flat`` — the P3SAPP path: vectorized byte ops
+  over the flat columnar buffer (see :mod:`repro.core.bytesops`). Stages
+  describe themselves as op descriptors so the pipeline executor can fuse
+  adjacent compatible ops across stage boundaries.
+* ``transform_row`` — the row-wise oracle with *identical semantics*, used by
+  the conventional approach (Algorithm 2) and by the equivalence tests.
+
+Stage set = the paper's §4.1 APIs (``ConvertToLower``, ``RemoveHTMLTags``,
+``RemoveUnwantedCharacters``, ``RemoveShortWords``) plus the two pre-existing
+Spark APIs it reuses (``Tokenizer``, ``StopWordsRemover``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import bytesops as B
+
+# The English stopword list used by Spark's StopWordsRemover is long; this is
+# the classic NLTK-ish core, sufficient for the case study and configurable.
+ENGLISH_STOPWORDS: tuple[str, ...] = tuple(
+    (
+        "i me my myself we our ours ourselves you your yours yourself yourselves "
+        "he him his himself she her hers herself it its itself they them their "
+        "theirs themselves what which who whom this that these those am is are "
+        "was were be been being have has had having do does did doing a an the "
+        "and but if or because as until while of at by for with about against "
+        "between into through during before after above below to from up down in "
+        "out on off over under again further then once here there when where why "
+        "how all any both each few more most other some such no nor not only own "
+        "same so than too very s t can will just don should now"
+    ).split()
+)
+
+
+class Stage:
+    """Base transformer: Spark ML Feature API protocol."""
+
+    def __init__(self, input_col: str, output_col: str | None = None):
+        self.input_col = input_col
+        self.output_col = output_col or input_col
+
+    # Spark Pipeline.fit() calls fit on estimators; plain transformers return
+    # themselves. Kept so our Pipeline is drop-in API-compatible.
+    def fit(self, frame) -> "Stage":
+        return self
+
+    # --- P3SAPP vectorized path ------------------------------------------
+    def flat_ops(self) -> list[B.Op]:
+        raise NotImplementedError
+
+    def transform_flat(self, buf: np.ndarray) -> np.ndarray:
+        return B.apply_ops(buf, self.flat_ops())
+
+    # --- row-wise oracle (CA path) ---------------------------------------
+    def transform_row(self, row: str) -> str:
+        raise NotImplementedError
+
+
+_ASCII_LOWER_TABLE = {c: c + 32 for c in range(ord("A"), ord("Z") + 1)}
+
+
+class ConvertToLower(Stage):
+    """Paper §4.1.1 — lowercase every entry of the column."""
+
+    def flat_ops(self):
+        return [B.lut_op(B.LOWER_LUT)]
+
+    def transform_row(self, row):
+        # ASCII-only lowering to match the byte LUT exactly.
+        return row.translate(_ASCII_LOWER_TABLE)
+
+
+def _strip_spans_row(row: str, open_c: str, close_c: str) -> str:
+    out = []
+    depth = 0
+    for ch in row:
+        if ch == open_c:
+            depth += 1
+        elif ch == close_c:
+            depth = max(depth - 1, 0)
+        elif depth == 0:
+            out.append(ch)
+    return "".join(out)
+
+
+class RemoveHTMLTags(Stage):
+    """Paper §4.1.2 — strip ``<...>`` spans (balanced per row, see contract)."""
+
+    def flat_ops(self):
+        return [B.span_op("<", ">")]
+
+    def transform_row(self, row):
+        return _strip_spans_row(row, "<", ">")
+
+
+class RemoveUnwantedCharacters(Stage):
+    """Paper §4.1.3 — parenthetical text, contraction mapping, punctuation,
+    digits/special characters → cleaned lowercase word stream."""
+
+    def flat_ops(self):
+        return [
+            B.span_op("(", ")"),
+            B.replace_op(B.CONTRACTIONS),
+            B.lut_op(B.UNWANTED_LUT),
+            B.collapse_op(),
+        ]
+
+    def transform_row(self, row):
+        row = _strip_spans_row(row, "(", ")")
+        for pat, rep in B.CONTRACTIONS:
+            row = row.replace(pat.decode(), rep.decode())
+        row = "".join(ch if ("a" <= ch <= "z" or ch == " ") else " " for ch in row)
+        return " ".join(w for w in row.split(" ") if w)
+
+
+class RemoveShortWords(Stage):
+    """Paper §4.1.4 — drop words with ``len(word) <= threshold``."""
+
+    def __init__(self, input_col: str, output_col: str | None = None, threshold: int = 1):
+        super().__init__(input_col, output_col)
+        self.threshold = threshold
+
+    def flat_ops(self):
+        from functools import partial
+
+        return [B.wordpred_op(partial(B.pred_short, threshold=self.threshold), needs_hashes=False)]
+
+    def transform_row(self, row):
+        return " ".join(w for w in row.split(" ") if len(w) > self.threshold)
+
+
+class Tokenizer(Stage):
+    """Spark ML ``Tokenizer``: whitespace split (columnar form: normalize
+    whitespace; list materialization happens at the frame boundary)."""
+
+    def flat_ops(self):
+        return [B.collapse_op()]
+
+    def transform_row(self, row):
+        return " ".join(w for w in row.split(" ") if w)
+
+
+class StopWordsRemover(Stage):
+    """Spark ML ``StopWordsRemover`` with vectorized 64-bit word hashing."""
+
+    def __init__(
+        self,
+        input_col: str,
+        output_col: str | None = None,
+        stopwords: tuple[str, ...] = ENGLISH_STOPWORDS,
+    ):
+        super().__init__(input_col, output_col)
+        self.stopwords = tuple(stopwords)
+        self._stopset = frozenset(self.stopwords)
+        self._words = B.WordSet(self.stopwords)
+
+    def flat_ops(self):
+        from functools import partial
+
+        return [B.wordpred_op(partial(B.pred_stopword, words=self._words), needs_hashes=True)]
+
+    def transform_row(self, row):
+        return " ".join(w for w in row.split(" ") if w and w not in self._stopset)
+
+
+# ---------------------------------------------------------------------------
+# Canonical case-study workflows (paper Fig. 2 / Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+def abstract_stages(col: str = "abstract", threshold: int = 1) -> list[Stage]:
+    """Paper Fig. 2: abstracts are the model *feature* → full cleaning."""
+    return [
+        ConvertToLower(col),
+        RemoveHTMLTags(col),
+        RemoveUnwantedCharacters(col),
+        StopWordsRemover(col),
+        RemoveShortWords(col, threshold=threshold),
+    ]
+
+
+def title_stages(col: str = "title") -> list[Stage]:
+    """Paper Fig. 3: titles are the model *target* → keep stopwords."""
+    return [
+        ConvertToLower(col),
+        RemoveHTMLTags(col),
+        RemoveUnwantedCharacters(col),
+        RemoveShortWords(col, threshold=1),
+    ]

@@ -1,0 +1,59 @@
+"""Batching utilities: cleaned records → fixed-shape model inputs."""
+
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from .tokenizer import PAD, WordTokenizer
+
+
+def seq2seq_arrays(
+    records: Sequence[dict],
+    tokenizer: WordTokenizer,
+    max_abstract_len: int = 128,
+    max_title_len: int = 24,
+    abstract_col: str = "abstract",
+    title_col: str = "title",
+) -> dict[str, np.ndarray]:
+    """Encode abstract (encoder input) and title (decoder target)."""
+    n = len(records)
+    enc = np.zeros((n, max_abstract_len), dtype=np.int32)
+    dec = np.zeros((n, max_title_len), dtype=np.int32)
+    for i, r in enumerate(records):
+        enc[i] = tokenizer.encode(r[abstract_col] or "", max_abstract_len)
+        dec[i] = tokenizer.encode(r[title_col] or "", max_title_len, add_start_end=True)
+    return {"encoder_tokens": enc, "decoder_tokens": dec}
+
+
+def batches(
+    arrays: dict[str, np.ndarray],
+    batch_size: int,
+    *,
+    shuffle: bool = True,
+    seed: int = 0,
+    drop_remainder: bool = True,
+) -> Iterator[dict[str, np.ndarray]]:
+    n = len(next(iter(arrays.values())))
+    idx = np.arange(n)
+    if shuffle:
+        np.random.default_rng(seed).shuffle(idx)
+    stop = (n // batch_size) * batch_size if drop_remainder else n
+    for s in range(0, stop, batch_size):
+        sel = idx[s : s + batch_size]
+        yield {k: v[sel] for k, v in arrays.items()}
+
+
+def train_val_split(
+    arrays: dict[str, np.ndarray], val_fraction: float = 0.1, seed: int = 0
+) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
+    n = len(next(iter(arrays.values())))
+    idx = np.arange(n)
+    np.random.default_rng(seed).shuffle(idx)
+    n_val = max(int(n * val_fraction), 1)
+    val, train = idx[:n_val], idx[n_val:]
+    return (
+        {k: v[train] for k, v in arrays.items()},
+        {k: v[val] for k, v in arrays.items()},
+    )

@@ -1,0 +1,67 @@
+"""Word-level tokenizer for the title-generation case study.
+
+The paper's Keras lineage uses a Keras ``Tokenizer`` (word-index map built
+from the cleaned corpus). Same here: vocabulary = most frequent words of
+the cleaned text, with the four specials the seq2seq decoder needs.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Iterable, Sequence
+
+import numpy as np
+
+PAD, START, END, UNK = 0, 1, 2, 3
+SPECIALS = ("<pad>", "<start>", "<end>", "<unk>")
+
+
+class WordTokenizer:
+    def __init__(self, vocab: Sequence[str]):
+        self.itos: list[str] = list(SPECIALS) + [w for w in vocab if w not in SPECIALS]
+        self.stoi: dict[str, int] = {w: i for i, w in enumerate(self.itos)}
+
+    @classmethod
+    def fit(cls, texts: Iterable[str], vocab_size: int = 8000) -> "WordTokenizer":
+        counts: Counter = Counter()
+        for t in texts:
+            counts.update(t.split())
+        vocab = [w for w, _ in counts.most_common(max(vocab_size - len(SPECIALS), 0))]
+        return cls(vocab)
+
+    def __len__(self) -> int:
+        return len(self.itos)
+
+    def encode(self, text: str, max_len: int, add_start_end: bool = False) -> np.ndarray:
+        ids = [self.stoi.get(w, UNK) for w in text.split()]
+        if add_start_end:
+            ids = [START] + ids[: max_len - 2] + [END]
+        else:
+            ids = ids[:max_len]
+        out = np.full(max_len, PAD, dtype=np.int32)
+        out[: len(ids)] = ids
+        return out
+
+    def decode(self, ids: Iterable[int]) -> str:
+        words = []
+        for i in ids:
+            if i == END:
+                break
+            if i in (PAD, START):
+                continue
+            words.append(self.itos[int(i)] if int(i) < len(self.itos) else "<unk>")
+        return " ".join(words)
+
+    # -- persistence (checkpointed with the model) -------------------------
+    def save(self, path: str | Path) -> None:
+        Path(path).write_text(json.dumps(self.itos))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "WordTokenizer":
+        itos = json.loads(Path(path).read_text())
+        tok = cls.__new__(cls)
+        tok.itos = itos
+        tok.stoi = {w: i for i, w in enumerate(itos)}
+        return tok

@@ -1,0 +1,146 @@
+"""Logical-axis sharding rule engine.
+
+Params and activations are annotated with *logical* axis names (see
+``LM.param_axes``). Rules map logical names to an ordered list of candidate
+mesh axes; ``spec_for`` picks the first candidate that (a) exists in the
+mesh, (b) divides the dimension, and (c) is not already taken by another
+dim of the same tensor. This divisibility-aware fallback is what lets all
+31 heterogeneous (arch × shape) cells compile on the same mesh without
+hand-written specs (e.g. kv_heads=8 on a 16-way model axis falls back to
+sharding head_dim; vocab=504 falls back to replication).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: TP over "model", DP/FSDP over ("pod","data").
+# Entries are candidate lists; special entry "data_axes"/"model_axis" name
+# the mesh roles.
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "vocab": (("model",),),
+    "embed": (),  # replicated by default; FSDP rule overrides
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (("model",),),  # fallback target when kv_heads indivisible
+    "mlp": (("model",),),
+    "experts": (("model",),),
+    "expert_ff": (),
+    "rnn": (("model",),),
+    "rnn_in": (),
+    "frontend": (),
+}
+
+FSDP_RULES = dict(DEFAULT_RULES)
+# ZeRO-3-style parameter sharding: span BOTH data-parallel axes on the
+# multi-pod mesh (halves per-chip parameter+optimizer bytes vs data-only
+# FSDP — measured on kimi-k2, EXPERIMENTS.md §Dry-run); falls back to
+# ("data",) on the single-pod mesh automatically.
+FSDP_RULES["embed"] = (("pod", "data"), ("data",))
+
+# Sequence-parallel + ZeRO-3 plan (hillclimb, EXPERIMENTS.md §Perf):
+# no tensor-parallel compute — the model axis shards the SEQUENCE of the
+# activations (see MeshContext.constrain_batch) and stores parameters
+# ZeRO-3-style over (data, model); weights are gathered at use (one
+# all-gather per layer per microbatch) instead of per-matmul activation
+# all-reduces. lm_head keeps vocab over model so logits shard 2D.
+SP_RULES = dict(DEFAULT_RULES)
+SP_RULES.update({
+    "seq": (("model",),),
+    "embed": (("data", "model"), ("data",)),
+    "vocab": (("model",),),
+    "heads": (),
+    "kv_heads": (),
+    "head_dim": (),
+    "mlp": (),
+    "rnn": (),
+})
+
+RULE_SETS = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES, "sp_zero3": SP_RULES}
+
+
+def _axes_in_mesh(mesh: Mesh, cand: Sequence[str]) -> bool:
+    return all(a in mesh.shape for a in cand)
+
+
+def _mesh_size(mesh: Mesh, cand: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in cand]))
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[str | None],
+    mesh: Mesh,
+    rules: Mapping[str, tuple] = DEFAULT_RULES,
+) -> P:
+    """Build a PartitionSpec for one tensor.
+
+    Per-tensor exclusivity: once a mesh axis is used by a dim, later dims
+    cannot reuse it (PartitionSpec invariant). ``kv_heads``+``head_dim``
+    cooperate: if kv_heads takes "model", head_dim's fallback is skipped.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, axes):
+        placed = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                cand = tuple(cand)
+                if not cand or not _axes_in_mesh(mesh, cand):
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                if dim % _mesh_size(mesh, cand) != 0:
+                    continue
+                placed = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        entries.append(placed)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(
+    shapes_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: Mapping[str, tuple] = DEFAULT_RULES,
+) -> Any:
+    """Map (ShapeDtypeStruct tree, logical-axes tree) -> NamedSharding tree."""
+
+    def one(sds, axes):
+        return NamedSharding(mesh, spec_for(sds.shape, axes, mesh, rules))
+
+    return jax.tree.map(
+        one, shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def with_shardings(shapes_tree: Any, shardings_tree: Any) -> Any:
+    """Attach shardings to a ShapeDtypeStruct tree (for AOT .lower())."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree,
+    )
+
+
+def batch_spec(mesh: Mesh, batch_size: int, rank: int = 2) -> P:
+    """Sharding spec for a (batch, ...) activation/input tensor."""
+    for cand in DEFAULT_RULES["batch"]:
+        if _axes_in_mesh(mesh, cand) and batch_size % _mesh_size(mesh, cand) == 0:
+            first = tuple(cand) if len(cand) > 1 else cand[0]
+            return P(first)
+    return P()
+
+
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,54 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Accepts model-layout tensors (b, s, heads, head_dim), handles head-dim MXU
+padding and sequence padding to block multiples, and exposes the same
+signature shape as repro.models.attention.dispatch_sdpa.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention_op(
+    q: jax.Array,  # (b, sq, nq, hd)
+    k: jax.Array,  # (b, skv, nkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    blk_q = min(blk_q, max(sq, 8))
+    blk_k = min(blk_k, max(skv, 8))
+
+    def pack(x, heads):
+        return jnp.moveaxis(x, 2, 1).reshape(x.shape[0] * heads, x.shape[1], hd)
+
+    qp, kp, vp = pack(q, nq), pack(k, nkv), pack(v, nkv)
+    pad_q = (-sq) % blk_q
+    pad_k = (-skv) % blk_k
+    if pad_q:
+        qp = jnp.pad(qp, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kp = jnp.pad(kp, ((0, 0), (0, pad_k), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(
+        qp, kp, vp,
+        n_q_heads=nq, n_kv_heads=nkv,
+        causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, kv_len=skv, interpret=interpret,
+    )
+    if pad_q:
+        out = out[:, :sq]
+    return jnp.moveaxis(out.reshape(b, nq, sq, hd), 1, 2)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BKV, S, D)
+    v: jax.Array,
+    *,
+    n_q_heads: int,
+    n_kv_heads: int,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    b = bh // n_q_heads
+    groups = n_q_heads // n_kv_heads
+    skv = k.shape[1]
+    qr = q.reshape(b, n_kv_heads, groups, sq, d)
+    kr = k.reshape(b, n_kv_heads, 1, skv, d)
+    vr = v.reshape(b, n_kv_heads, 1, skv, d)
+    s = jnp.einsum("bngsd,bnxtd->bngst", qr, kr).astype(jnp.float32) / np.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bngst,bnxtd->bngsd", p, vr)
+    return o.reshape(bh, sq, d)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the fused LSTM cell kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .lstm_cell import lstm_cell
+
+# VMEM budget sanity: the whole-contraction tiles must fit (~16 MiB/core).
+_MAX_CONTRACT_ELEMS = 4 * 1024 * 1024
+
+
+@partial(jax.jit, static_argnames=("blk_b", "blk_h", "interpret"))
+def lstm_cell_op(x, h, c, params: dict, *, blk_b: int = 128, blk_h: int = 256,
+                 interpret: bool = False):
+    """params: {"wx": (d_in, 4H), "wh": (H, 4H), "b": (4H,)} — the layout
+    used by repro.models.seq2seq; reshaped here to the kernel layout."""
+    d_in = params["wx"].shape[0]
+    hidden = h.shape[1]
+    assert d_in * hidden <= _MAX_CONTRACT_ELEMS, "weights exceed VMEM tile budget"
+    # (d, 4H) column layout is [i | f | g | o] blocks of width H
+    wx = params["wx"].reshape(d_in, 4, hidden)
+    wh = params["wh"].reshape(hidden, 4, hidden)
+    b = params["b"].reshape(4, hidden)
+    return lstm_cell(x, h, c, wx, wh, b, blk_b=blk_b, blk_h=blk_h, interpret=interpret)

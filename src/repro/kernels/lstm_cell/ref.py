@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel (matches
+repro.models.seq2seq.lstm_cell: gate order i,f,g,o, forget bias +1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """wx: (d_in, 4, H); wh: (H, 4, H); b: (4, H)."""
+    d_in, _, hidden = wx.shape
+    z = (
+        x @ wx.reshape(d_in, 4 * hidden)
+        + h @ wh.reshape(hidden, 4 * hidden)
+        + b.reshape(4 * hidden)
+    ).astype(jnp.float32)
+    z = z.reshape(x.shape[0], 4, hidden)
+    i, f, g, o = z[:, 0], z[:, 1], z[:, 2], z[:, 3]
+    c_new = jax.nn.sigmoid(f + 1.0) * c.astype(jnp.float32) + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new.astype(x.dtype), c_new.astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the chunked mLSTM kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .mlstm_chunk import mlstm_chunk
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_op(q, k, v, i_gate, f_gate, *, chunk: int = 64, interpret: bool = False):
+    """Model-layout entry: q/k/v (b, s, H, dh), gates (b, s, H)."""
+    b, s, H, dh = q.shape
+    pad = (-s) % chunk
+
+    def pack(x):
+        x = jnp.moveaxis(x, 2, 1).reshape(b * H, s, *x.shape[3:])
+        if pad:
+            width = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+            x = jnp.pad(x, width)
+        return x
+
+    # padded forget gates default 0 -> log_sigmoid(0) finite; padded output
+    # rows are sliced away below, and padding never affects earlier chunks
+    out = mlstm_chunk(
+        pack(q), pack(k), pack(v), pack(i_gate), pack(f_gate),
+        chunk=chunk, interpret=interpret,
+    )
+    out = out[:, :s].reshape(b, H, s, dh)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle: sequential per-timestep mLSTM recurrence (the same
+stabilized algebra as repro.models.xlstm._mlstm_step, packed layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mlstm_chunk_ref(q, k, v, i_gate, f_gate):
+    """q/k/v: (BH, S, dh); gates: (BH, S). Returns h: (BH, S, dh)."""
+    bh, s, dh = q.shape
+
+    def step(state, xs):
+        C, n, m = state
+        qt, kt, vt, it, ft = xs  # (BH, dh) / (BH,)
+        f_log = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(f_log + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        C = f_p[:, None, None] * C + i_p[:, None, None] * (vt[:, :, None] * kt[:, None, :])
+        n = f_p[:, None] * n + i_p[:, None] * kt
+        den = jnp.maximum(jnp.abs(jnp.einsum("bk,bk->b", n, qt)), 1.0)
+        h = jnp.einsum("bvk,bk->bv", C, qt) / den[:, None]
+        return (C, n, m_new), h
+
+    state = (
+        jnp.zeros((bh, dh, dh), jnp.float32),
+        jnp.zeros((bh, dh), jnp.float32),
+        jnp.full((bh,), NEG_INF, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(i_gate.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(f_gate.astype(jnp.float32), 1, 0),
+    )
+    _, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the RG-LRU kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .rg_lru import rg_lru
+
+
+@partial(jax.jit, static_argnames=("blk_s", "blk_d", "interpret"))
+def rg_lru_op(
+    a: jax.Array,
+    b: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    blk_s: int = 256,
+    blk_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_dtype = a.dtype
+    out = rg_lru(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        None if h0 is None else h0.astype(jnp.float32),
+        blk_s=blk_s, blk_d=blk_d, interpret=interpret,
+    )
+    return out.astype(orig_dtype)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_ref(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan (same math as the
+    training path in repro.models.rglru)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

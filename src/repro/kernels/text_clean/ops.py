@@ -1,0 +1,47 @@
+"""Jit'd public wrapper for the text-clean kernel + host bridging.
+
+``clean_rows`` is the practical entry point: list[str] -> cleaned
+list[str], doing padding/packing on the host and the character pipeline on
+device (interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from .text_clean import text_clean
+
+
+@partial(jax.jit, static_argnames=("strip_html", "blk_rows", "interpret"))
+def text_clean_op(rows, *, strip_html: bool = True, blk_rows: int = 256,
+                  interpret: bool = False):
+    return text_clean(rows, strip_html=strip_html, blk_rows=blk_rows, interpret=interpret)
+
+
+def pack_rows(rows: list[str], width: int | None = None) -> np.ndarray:
+    """Pad/truncate UTF-8 rows into a (n, width) uint8 matrix (space pad)."""
+    enc = [r.encode("utf-8", errors="ignore") for r in rows]
+    width = width or max((len(e) for e in enc), default=1)
+    out = np.full((len(rows), width), 32, dtype=np.uint8)
+    for i, e in enumerate(enc):
+        out[i, : min(len(e), width)] = np.frombuffer(e[:width], dtype=np.uint8)
+    return out
+
+
+def unpack_rows(mat: np.ndarray) -> list[str]:
+    out = []
+    for row in np.asarray(mat):
+        s = row.tobytes().decode("utf-8", errors="ignore")
+        out.append(" ".join(s.split()))
+    return out
+
+
+def clean_rows(rows: list[str], *, strip_html: bool = True, interpret: bool = True) -> list[str]:
+    if not rows:
+        return []
+    mat = pack_rows(rows)
+    cleaned = text_clean_op(mat, strip_html=strip_html, interpret=interpret)
+    return unpack_rows(np.asarray(cleaned))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the text-clean kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SPACE = 32
+
+
+def text_clean_ref(rows: jax.Array, *, strip_html: bool = True) -> jax.Array:
+    x = rows.astype(jnp.int32)
+    upper = (x >= 65) & (x <= 90)
+    x = jnp.where(upper, x + 32, x)
+    keep = jnp.ones_like(x, dtype=bool)
+    if strip_html:
+        lt = (x == 60).astype(jnp.int32)
+        gt = (x == 62).astype(jnp.int32)
+        depth = jnp.cumsum(lt - gt, axis=1)
+        keep = (depth == 0) & (x != 62)
+    is_word = (x >= 97) & (x <= 122)
+    return jnp.where(is_word & keep, x, SPACE).astype(jnp.uint8)

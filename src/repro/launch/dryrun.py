@@ -1,0 +1,429 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell and extract the roofline inputs.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init). Do NOT import this module from tests — it is a CLI:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --cells all
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  --cells kimi_k2_1t_a32b:train_4k
+
+Per cell this produces benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json
+with: compiled FLOPs / bytes (cost_analysis), per-collective byte totals
+parsed from the post-SPMD HLO, memory analysis when the backend provides
+it, and analytic MODEL_FLOPS for the §Roofline usefulness ratio.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, all_cells, get
+from ..distributed.sharding import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    batch_spec,
+    data_axis_names,
+    tree_shardings,
+    with_shardings,
+)
+from ..models.lm import LM, MeshContext
+from ..optim.adamw import AdamW
+from ..runtime.train_loop import TrainStepConfig, make_train_step
+from .mesh import make_production_mesh
+
+# Per-arch training microbatch rows per device-shard (activation memory).
+MICRO_ROWS = {
+    "hubert_xlarge": 4,
+    "deepseek_moe_16b": 2,
+    "kimi_k2_1t_a32b": 1,
+    "stablelm_3b": 8,
+    "command_r_plus_104b": 1,
+    "granite_20b": 2,
+    "qwen2_5_32b": 2,
+    "recurrentgemma_9b": 4,
+    "xlstm_1_3b": 8,
+    "qwen2_vl_72b": 1,
+}
+
+# FSDP (params sharded over the data axis) for archs that cannot replicate.
+FSDP_ARCHS = {
+    "kimi_k2_1t_a32b", "command_r_plus_104b", "qwen2_vl_72b",
+    "qwen2_5_32b", "granite_20b", "deepseek_moe_16b",
+}
+
+# --plan optimized: the per-arch hillclimb configurations (EXPERIMENTS.md
+# §Perf). Baseline cells stay as recorded under results/dryrun/.
+from ..distributed.sharding import SP_RULES  # noqa: E402
+
+_KIMI_RULES = dict(FSDP_RULES)
+_KIMI_RULES["expert_ff"] = (("data",),)  # TP-in-expert: weights stay resident
+# 64 q-heads shard cleanly over the 16-way model axis; keep K/V replicated
+# instead of falling back to head_dim sharding (which put an all-reduce in
+# every attention chunk step — measured in iteration 1)
+_KIMI_RULES["kv_heads"] = ()
+_KIMI_RULES["head_dim"] = ()
+
+OPTIMIZED_PLANS: dict[str, dict] = {
+    # worst roofline fraction: chunkwise mLSTM (model-code change) — no
+    # sharding overrides needed, recompilation picks it up
+    "xlstm_1_3b": {},
+    # most collective-bound: sequence-parallel + ZeRO-3, kv-only attention
+    # streaming, single macrobatch
+    "qwen2_5_32b": {
+        "rules": SP_RULES,
+        "micro_rows": 16,
+        "seq_parallel": True,
+        "cfg_updates": {"attn_q_chunk": 0},
+    },
+    # 1T-scale MoE: batched expert GEMMs + expert weights resident
+    # (expert_ff over data) + fewer microbatches + Q-head TP with
+    # replicated KV (iteration 2)
+    "kimi_k2_1t_a32b": {
+        "rules": _KIMI_RULES,
+        "micro_rows": 4,
+        "moe_impl": "batched",
+    },
+    # bonus: deepseek with batched experts (same family as kimi)
+    "deepseek_moe_16b": {"moe_impl": "batched"},
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+\[[^\]]*\]))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective payload bytes from post-partitioning HLO.
+
+    Methodology: result-shape bytes per op; all-reduce counted 2x (ring =
+    reduce-scatter + all-gather wire traffic)."""
+    out = {k: 0 for k in
+           ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")}
+    counts = dict(out)
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        if op == "all-reduce":
+            b *= 2
+        out[op] += b
+        counts[op] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+    allocation) for every model input of this cell."""
+    cfg = get(arch)
+    shp = SHAPES[shape_name]
+    from jax.sharding import NamedSharding
+
+    b, s = shp.global_batch, shp.seq_len
+    bspec = batch_spec(mesh, b)
+
+    def sh(spec):
+        return NamedSharding(mesh, spec)
+
+    from jax.sharding import PartitionSpec as P
+
+    def bsp(*rest):
+        return sh(P(*((bspec[0] if len(bspec) else None,) + rest)))
+
+    if shp.kind == "train":
+        if cfg.frontend == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16, sharding=bsp(None, None)),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsp(None)),
+            }
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsp(None))}
+        if cfg.frontend == "vision":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16, sharding=bsp(None, None)
+            )
+        return batch
+    if shp.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16, sharding=bsp(None, None)),
+            }
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsp(None))}
+        if cfg.frontend == "vision":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16, sharding=bsp(None, None)
+            )
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=bsp(None))}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, param_dtype=jnp.bfloat16,
+               plan: dict | None = None):
+    import dataclasses
+
+    cfg = get(arch)
+    shp = SHAPES[shape_name]
+    plan = plan or {}
+    if plan.get("cfg_updates"):
+        cfg = dataclasses.replace(cfg, **plan["cfg_updates"])
+    if plan.get("moe_impl") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, expert_impl=plan["moe_impl"])
+        )
+    mctx = MeshContext(
+        mesh, data_axis_names(mesh), "model",
+        seq_axis="model" if plan.get("seq_parallel") else "",
+    )
+    model = LM(cfg, mctx, remat=True, dtype=param_dtype)
+    rules = plan.get("rules") or (FSDP_RULES if arch in FSDP_ARCHS else DEFAULT_RULES)
+
+    param_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    param_sh = tree_shardings(param_sds, model.param_axes(), mesh, rules)
+    params_in = with_shardings(param_sds, param_sh)
+    batch = input_specs(arch, shape_name, mesh)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+
+    if shp.kind == "train":
+        micro_rows = plan.get("micro_rows", MICRO_ROWS.get(arch, 4))
+        local_rows = shp.global_batch  # rows stay global in pjit-land
+        dp = int(np.prod([mesh.shape[a] for a in data_axis_names(mesh)]))
+        n_micro = max(1, shp.global_batch // (micro_rows * dp))
+        opt = AdamW(learning_rate=1e-4)
+        step = make_train_step(model.loss, opt, TrainStepConfig(n_microbatches=n_micro))
+        opt_sds = jax.eval_shape(opt.init, param_sds)
+        opt_sh = type(opt_sds)(
+            count=repl,
+            m=tree_shardings(opt_sds.m, model.param_axes(), mesh, rules),
+            v=tree_shardings(opt_sds.v, model.param_axes(), mesh, rules),
+        )
+        opt_in = with_shardings(opt_sds, opt_sh)
+        metrics_sh = {"loss": repl, "grad_norm": repl}
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, jax.tree.map(lambda s: s.sharding, batch)),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+        args = (params_in, opt_in, batch)
+        extra = {"n_microbatches": n_micro}
+    elif shp.kind == "prefill":
+        if not cfg.causal:
+            def fwd(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits
+            logits_sh = NamedSharding(
+                mesh, P(batch_spec(mesh, shp.global_batch)[0] if len(batch_spec(mesh, shp.global_batch)) else None, None, None)
+            )
+            jitted = jax.jit(fwd, in_shardings=(param_sh, jax.tree.map(lambda s: s.sharding, batch)),
+                             out_shardings=logits_sh)
+            args = (params_in, batch)
+            extra = {}
+        else:
+            state_sds = jax.eval_shape(
+                lambda: model.init_decode_state(shp.global_batch, shp.seq_len, jnp.bfloat16)
+            )
+            state_sh = tree_shardings(state_sds, model.decode_state_axes(), mesh, rules)
+            state_in = with_shardings(state_sds, state_sh)
+
+            def prefill(params, tokens_batch, state):
+                logits, state = model.decode_step(params, tokens_batch["tokens"], state, jnp.int32(0))
+                return logits, state
+
+            bs = batch_spec(mesh, shp.global_batch)
+            logits_sh = NamedSharding(mesh, P(bs[0] if len(bs) else None))
+            jitted = jax.jit(
+                prefill,
+                in_shardings=(param_sh, jax.tree.map(lambda s: s.sharding, batch), state_sh),
+                out_shardings=(logits_sh, state_sh),
+                donate_argnums=(2,),
+            )
+            args = (params_in, batch, state_in)
+            extra = {}
+    else:  # decode
+        state_sds = jax.eval_shape(
+            lambda: model.init_decode_state(shp.global_batch, shp.seq_len, jnp.bfloat16)
+        )
+        state_sh = tree_shardings(state_sds, model.decode_state_axes(), mesh, rules)
+        state_in = with_shardings(state_sds, state_sh)
+
+        def decode(params, tokens_batch, state, pos):
+            logits, state = model.decode_step(params, tokens_batch["tokens"], state, pos)
+            return logits, state
+
+        bs = batch_spec(mesh, shp.global_batch)
+        jitted = jax.jit(
+            decode,
+            in_shardings=(param_sh, jax.tree.map(lambda s: s.sharding, batch), state_sh, repl),
+            out_shardings=(NamedSharding(mesh, P(bs[0] if len(bs) else None)), state_sh),
+            donate_argnums=(2,),
+        )
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+        args = (params_in, batch, state_in, pos)
+        extra = {}
+    return jitted, args, extra
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs: 6·N_active·tokens (train) / 2·N_active·tokens
+    (inference forward), attention KV term excluded (recorded separately)."""
+    cfg = get(arch)
+    shp = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shp.global_batch  # one token per request
+    return 2.0 * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             plan: dict | None = None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    out_path = out_dir / mesh_name / f"{arch}__{shape_name}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if plan:
+        rec["plan"] = {k: str(v)[:200] for k, v in plan.items()}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["mesh_shape"] = dict(mesh.shape)
+    rec["n_devices"] = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.time()
+        jitted, args, extra = build_cell(arch, shape_name, mesh, plan=plan)
+        with mesh:
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["cost_analysis"] = {
+                "flops": float(ca.get("flops", -1)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis"] = {"error": str(e)}
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            } if ma is not None else None
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)  # flat (body-once) view
+        from .hlo_cost import analyze
+
+        rec["hlo_cost"] = analyze(hlo)  # trip-count-aware per-device costs
+        rec["hlo_chars"] = len(hlo)
+        try:
+            import zstandard
+
+            comp_path = out_path.with_suffix(".hlo.zst")
+            comp_path.write_bytes(zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+        except Exception:
+            pass
+        rec["model_flops"] = model_flops(arch, shape_name)
+        rec["params"] = get(arch).param_count()
+        rec["active_params"] = get(arch).active_param_count()
+        rec.update(extra)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    out_path.write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec["ok"] else f"FAIL ({rec['error'][:120]})"
+    print(f"[{mesh_name}] {arch} x {shape_name}: {status}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--cells", default="all", help="all | arch:shape[,arch:shape...]")
+    ap.add_argument("--arch", default=None, help="restrict to one architecture")
+    ap.add_argument("--plan", choices=["baseline", "optimized"], default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = (
+            "benchmarks/results/dryrun"
+            if args.plan == "baseline"
+            else "benchmarks/results/dryrun_opt"
+        )
+
+    cells = all_cells()
+    if args.cells != "all":
+        want = [tuple(c.split(":")) for c in args.cells.split(",")]
+        cells = [c for c in cells if c in want]
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_fail = 0
+    for multi in meshes:
+        for arch, shape in cells:
+            mesh_name = "multi" if multi else "single"
+            p = out_dir / mesh_name / f"{arch}__{shape}.json"
+            if args.skip_existing and p.exists() and json.loads(p.read_text()).get("ok"):
+                print(f"[{mesh_name}] {arch} x {shape}: cached OK", flush=True)
+                continue
+            if args.plan == "optimized":
+                plan = OPTIMIZED_PLANS.get(arch, {})
+            else:
+                # baseline = the recorded paper-faithful state: full-size
+                # (non-ring) KV caches, ragged experts, TP rules
+                plan = {"cfg_updates": {"ring_kv": False}}
+            rec = run_cell(arch, shape, multi, out_dir, plan=plan)
+            n_fail += 0 if rec["ok"] else 1
+    print(f"dry-run complete, {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Multi-head attention: GQA, RoPE/M-RoPE, sliding window, KV cache.
+
+The jnp reference path is what the distributed dry-run lowers (XLA SPMD
+shards it); the Pallas flash kernel (repro.kernels.flash_attention) is the
+TPU hot-path alternative, validated against this in tests and selectable
+via ``use_flash``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import apply_mrope, apply_rope, truncated_normal
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (batch, max_seq, n_kv_heads, head_dim)
+    v: jax.Array
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = cfg.init_scale / np.sqrt(d)
+    p = {
+        "wq": truncated_normal(kq, (d, nq, hd), dtype, s),
+        "wk": truncated_normal(kk, (d, nkv, hd), dtype, s),
+        "wv": truncated_normal(kv, (d, nkv, hd), dtype, s),
+        "wo": truncated_normal(ko, (nq, hd, d), dtype, cfg.init_scale / np.sqrt(nq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def attention_axes(cfg) -> dict:
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = ("kv_heads", "head_dim")
+        p["bv"] = ("kv_heads", "head_dim")
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _rope(q, k, positions, cfg):
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        hd = cfg.resolved_head_dim // 2
+        # Qwen2-VL-style section split over half-dim (t, h, w)
+        sections = (hd - 2 * (hd // 4), hd // 4, hd // 4)
+        pos3 = mrope_positions(positions, cfg)
+        q = apply_mrope(q, pos3, sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, sections, cfg.rope_theta)
+    return q, k
+
+
+def mrope_positions(positions: jax.Array, cfg) -> jax.Array:
+    """(3, b, s) temporal/height/width positions. The leading
+    ``n_frontend_tokens`` positions are image patches on a
+    sqrt-grid (dynamic-resolution stub); the rest is text (t=h=w)."""
+    n_img = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    grid = max(int(np.sqrt(max(n_img, 1))), 1)
+    is_img = positions < n_img
+    h = jnp.where(is_img, (positions % (grid * grid)) // grid, positions)
+    w = jnp.where(is_img, positions % grid, positions)
+    t = jnp.where(is_img, 0, positions)
+    return jnp.stack([t, h, w])
+
+
+def sdpa(
+    q: jax.Array,  # (b, sq, nq, hd)
+    k: jax.Array,  # (b, skv, nkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    k_positions: jax.Array | None = None,  # absolute key positions (ring cache)
+) -> jax.Array:
+    """Grouped-query SDPA with optional causal mask, sliding window and
+    KV-cache length masking. fp32 softmax."""
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    groups = nq // nkv
+    qg = q.reshape(b, sq, nkv, groups, hd)
+    scores = jnp.einsum("bsngk,btnk->bngst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+
+    q_pos = jnp.arange(sq)[:, None] + q_offset  # absolute query positions
+    k_pos = (k_positions if k_positions is not None else jnp.arange(skv))[None, :]
+    mask = k_pos >= 0
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnk->bsngk", probs, v)
+    return out.reshape(b, sq, nq, hd)
+
+
+def chunked_sdpa(
+    q: jax.Array,  # (b, sq, nq, hd)
+    k: jax.Array,  # (b, skv, nkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (scan over q and kv
+    chunks). Never materializes the (sq, skv) score matrix — this is what
+    makes 32k prefill / 4k train lowerable at production batch sizes. The
+    Pallas kernel (repro.kernels.flash_attention) is the TPU twin."""
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq_chunks = (sq + q_chunk - 1) // q_chunk
+    nkv_chunks = (skv + kv_chunk - 1) // kv_chunk
+    pad_q = nq_chunks * q_chunk - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    pad_kv = nkv_chunks * kv_chunk - skv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    eff_kv_len = jnp.asarray(kv_len if kv_len is not None else skv)
+
+    qg = q.reshape(b, nq_chunks, q_chunk, nkv, g, hd)
+    qg = jnp.moveaxis(qg, 1, 0)  # (nQ, b, qc, nkv, g, hd)
+    kc = jnp.moveaxis(k.reshape(b, nkv_chunks, kv_chunk, nkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nkv_chunks, kv_chunk, nkv, hd), 1, 0)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_body(carry, inp):
+        qi, q_blk = inp  # q_blk: (b, qc, nkv, g, hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_body(state, kv_inp):
+            m, l, acc = state
+            kj, k_blk, v_blk = kv_inp
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqngk,btnk->bngqt", q_blk, k_blk).astype(jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            mask &= k_pos[None, :] < eff_kv_len
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bngqt,btnk->bngqk", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (jnp.arange(nkv_chunks), kc, vc)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1)  # (b, qc, nkv, g, hd)
+        return carry, out.astype(q_blk.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq_chunks), qg))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq_chunks * q_chunk, nkv, g, hd)
+    if pad_q:
+        out = out[:, :sq]
+    return out.reshape(b, sq, nq, hd)
+
+
+# jnp attention dispatch: naive path keeps the oracle simple for short
+# sequences; long sequences must never materialize (sq, skv).
+CHUNKED_THRESHOLD = 2048
+
+
+def dispatch_sdpa(q, k, v, *, q_chunk: int = 512, kv_chunk: int = 1024, **kw):
+    sq, skv = q.shape[1], k.shape[1]
+    if sq * skv > CHUNKED_THRESHOLD * CHUNKED_THRESHOLD or sq > CHUNKED_THRESHOLD:
+        # q_chunk == 0: kv-only streaming (sequence-parallel plan — the
+        # query seq axis may be mesh-sharded and must not be re-chunked)
+        return chunked_sdpa(
+            q, k, v, q_chunk=(q_chunk or sq), kv_chunk=kv_chunk, **kw
+        )
+    return sdpa(q, k, v, **kw)
+
+
+def attend(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: KVCache | None = None,
+    cache_pos: jax.Array | int = 0,
+) -> tuple[jax.Array, KVCache | None]:
+    """Full attention sub-layer. With ``cache`` set, performs decode-style
+    cache update (x is the new token block) and attends over the cache."""
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope(q, k, positions, cfg)
+    chunks = dict(q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    if cache is None:
+        out = dispatch_sdpa(q, k, v, causal=cfg.causal, window=cfg.window, **chunks)
+        new_cache = None
+    elif cfg.window > 0 and cache.k.shape[1] <= cfg.window:
+        out, new_cache = _ring_attend(q, k, v, cache, cache_pos, cfg, chunks)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
+        kv_len = cache_pos + x.shape[1]
+        out = dispatch_sdpa(
+            q, ck, cv,
+            causal=cfg.causal, window=cfg.window,
+            q_offset=cache_pos, kv_len=kv_len, **chunks,
+        )
+        new_cache = KVCache(ck, cv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def _ring_attend(q, k, v, cache: KVCache, cache_pos, cfg, chunks):
+    """Sliding-window ring-buffer KV cache (beyond-paper §Perf): the cache
+    holds only the last `window` keys (exact — windowed attention never
+    reads older ones). Slot for absolute position P is P % window; slot i
+    currently holds position cache_len-1 - ((cache_len-1 - i) % window).
+
+    Block prefill (s > 1) is supported at cache_pos == 0: in-block windowed
+    attention + write the trailing `window` tokens into the ring."""
+    w = cache.k.shape[1]
+    s = q.shape[1]
+    if s == 1:
+        slot = cache_pos % w
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        i = jnp.arange(w)
+        k_positions = cache_pos - ((cache_pos - i) % w)  # absolute pos per slot
+        out = sdpa(
+            q, ck, cv, causal=cfg.causal, window=cfg.window,
+            q_offset=cache_pos, k_positions=k_positions,
+        )
+        return out, KVCache(ck, cv)
+    # block prefill
+    out = dispatch_sdpa(q, k, v, causal=cfg.causal, window=cfg.window, **chunks)
+    take = min(w, s)
+    tail_k = k[:, s - take :].astype(cache.k.dtype)
+    tail_v = v[:, s - take :].astype(cache.v.dtype)
+    slots = (jnp.arange(s - take, s) % w)
+    ck = cache.k.at[:, slots].set(tail_k)
+    cv = cache.v.at[:, slots].set(tail_v)
+    return out, KVCache(ck, cv)
+
+
+def init_kv_cache(batch: int, max_seq: int, cfg, dtype=jnp.bfloat16) -> KVCache:
+    ring = cfg.window > 0 and getattr(cfg, "ring_kv", True)
+    seq = min(max_seq, cfg.window) if ring else max_seq
+    shape = (batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

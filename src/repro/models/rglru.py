@@ -1,0 +1,149 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv + RG-LRU.
+
+Recurrence (Griffin, arXiv:2402.19427):
+
+    r_t = sigmoid(W_r u_t + b_r)            # recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)            # input gate
+    log a_t = -c * softplus(Lambda) * r_t   # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` on the affine pairs
+(a, b) — the same math the Pallas kernel (repro.kernels.rg_lru) computes
+with a blocked sequential grid. Decode is a single-step state update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import truncated_normal
+
+_C = 8.0
+_CONV_WIDTH = 4
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (b, d_rnn) recurrent state
+    conv: jax.Array  # (b, CONV_WIDTH-1, d_rnn) trailing conv inputs
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    s = cfg.init_scale / np.sqrt(d)
+    sr = cfg.init_scale / np.sqrt(dr)
+    # Lambda init so that a spans ~[0.9, 0.999] (Griffin appendix)
+    lam = jnp.asarray(
+        np.log(np.expm1(-np.log(np.random.RandomState(0).uniform(0.9, 0.999, dr)) / _C)),
+        jnp.float32,
+    )
+    return {
+        "w_in": truncated_normal(k1, (d, dr), dtype, s),
+        "w_gate": truncated_normal(k2, (d, dr), dtype, s),
+        "w_out": truncated_normal(k3, (dr, d), dtype, sr),
+        "conv_w": truncated_normal(k4, (_CONV_WIDTH, dr), dtype, 0.5),
+        "w_r": truncated_normal(k5, (dr, dr), dtype, sr),
+        "w_i": truncated_normal(k6, (dr, dr), dtype, sr),
+        "b_r": jnp.zeros((dr,), dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        "lam": lam,
+    }
+
+
+def rglru_axes(cfg) -> dict:
+    return {
+        "w_in": ("embed", "rnn"),
+        "w_gate": ("embed", "rnn"),
+        "w_out": ("rnn", "embed"),
+        "conv_w": (None, "rnn"),
+        "w_r": ("rnn", "rnn_in"),
+        "w_i": ("rnn", "rnn_in"),
+        "b_r": ("rnn",),
+        "b_i": ("rnn",),
+        "lam": ("rnn",),
+    }
+
+
+def _gates(p: dict, u: jax.Array):
+    """a (decay) and gated input b for the linear recurrence (fp32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32) + p["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(p: dict, u: jax.Array, h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU. u: (b, s, dr) -> (outputs, final_state)."""
+    a, b = _gates(p, u)
+    if h0 is not None:
+        # fold the initial state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(u.dtype), hh[:, -1]
+
+
+def rglru_step(p: dict, u_t: jax.Array, h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single decode step. u_t: (b, dr), h: (b, dr) fp32."""
+    a, b = _gates(p, u_t[:, None, :])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(u_t.dtype), h_new
+
+
+def _causal_conv(p: dict, u: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv width 4. u: (b, s, dr)."""
+    w = p["conv_w"]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], _CONV_WIDTH - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)  # (b, s+3, dr)
+    s = u.shape[1]
+    out = sum(ext[:, i : i + s] * w[_CONV_WIDTH - 1 - i] for i in range(_CONV_WIDTH))
+    new_tail = ext[:, -(_CONV_WIDTH - 1) :]
+    return out, new_tail
+
+
+def apply_rglru_mix(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    state: RGLRUState | None = None,
+) -> tuple[jax.Array, RGLRUState | None]:
+    """Temporal-mixing sub-layer (replaces attention). x: (b, s, d)."""
+    u = x @ p["w_in"]
+    g = x @ p["w_gate"]
+    if state is None:
+        u, _ = _causal_conv(p, u)
+        h, _ = rglru_scan(p, u)
+        new_state = None
+    else:
+        u, new_tail = _causal_conv(p, u, tail=state.conv)
+        if x.shape[1] == 1:
+            h, h_state = rglru_step(p, u[:, 0], state.h)
+            h = h[:, None]
+        else:
+            h, h_state = rglru_scan(p, u, h0=state.h)
+        new_state = RGLRUState(h_state, new_tail)
+    y = (h * jax.nn.gelu(g.astype(jnp.float32)).astype(h.dtype)) @ p["w_out"]
+    return y, new_state
+
+
+def init_rglru_state(batch: int, cfg, dtype=jnp.float32) -> RGLRUState:
+    dr = cfg.resolved_d_rnn
+    return RGLRUState(
+        h=jnp.zeros((batch, dr), jnp.float32),
+        conv=jnp.zeros((batch, _CONV_WIDTH - 1, dr), dtype),
+    )

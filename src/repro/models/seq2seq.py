@@ -1,0 +1,187 @@
+"""The paper's case study: LSTM seq2seq title generation with Bahdanau
+attention (paper §4.2.3, Figs. 4-6, Algorithm 3).
+
+Faithful structure:
+* 3-layer stacked LSTM encoder over the cleaned abstract (paper: "a 3-layer
+  stacked LSTM is used for encoder").
+* single-layer LSTM decoder initialized from the encoder's final
+  hidden/cell states.
+* Bahdanau additive attention (paper eqs. 1-5): e_ij = v^T tanh(W_s s_i +
+  W_h h_j); a_ij = softmax; C_i = sum_j a_ij h_j; S_i = [s_i; C_i];
+  y_i = dense(S_i).
+* Training predicts the target sequence offset by one time-step (teacher
+  forcing); inference is greedy argmax until <end> or max length
+  (Algorithm 3).
+
+Pure JAX: ``jax.lax.scan`` over time; the LSTM cell matches the fused
+Pallas kernel (repro.kernels.lstm_cell) bit-for-bit at fp32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.tokenizer import END, PAD, START
+from .blocks import truncated_normal
+
+
+@dataclass(frozen=True)
+class Seq2SeqConfig:
+    vocab_size: int
+    d_embed: int = 128
+    d_hidden: int = 256
+    n_encoder_layers: int = 3
+    max_abstract_len: int = 128
+    max_title_len: int = 24
+    init_scale: float = 0.08
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array
+    c: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell (the jnp twin of kernels/lstm_cell)
+# ---------------------------------------------------------------------------
+
+
+def init_lstm_layer(key, d_in: int, d_hidden: int, scale: float, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": truncated_normal(k1, (d_in, 4 * d_hidden), dtype, scale / np.sqrt(d_in)),
+        "wh": truncated_normal(k2, (d_hidden, 4 * d_hidden), dtype, scale / np.sqrt(d_hidden)),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+def lstm_cell(p: dict, x_t: jax.Array, state: LSTMState) -> LSTMState:
+    """Standard LSTM cell; gate order (i, f, g, o). fp32 gate math."""
+    z = (x_t @ p["wx"] + state.h @ p["wh"] + p["b"]).astype(jnp.float32)
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * state.c.astype(jnp.float32) + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return LSTMState(h.astype(x_t.dtype), c.astype(x_t.dtype))
+
+
+def lstm_scan(p: dict, xs: jax.Array, state: LSTMState) -> tuple[jax.Array, LSTMState]:
+    """xs: (b, s, d) -> (hs (b, s, H), final_state)."""
+
+    def step(st, x_t):
+        st = lstm_cell(p, x_t, st)
+        return st, st.h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Seq2Seq:
+    def __init__(self, cfg: Seq2SeqConfig, dtype=jnp.float32):
+        self.cfg = cfg
+        self.dtype = dtype
+
+    def init(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 8 + cfg.n_encoder_layers)
+        enc_layers = []
+        d_in = cfg.d_embed
+        for i in range(cfg.n_encoder_layers):
+            enc_layers.append(init_lstm_layer(ks[i], d_in, cfg.d_hidden, cfg.init_scale, dt))
+            d_in = cfg.d_hidden
+        j = cfg.n_encoder_layers
+        s = cfg.init_scale
+        return {
+            "embed_enc": truncated_normal(ks[j], (cfg.vocab_size, cfg.d_embed), dt, 1.0),
+            "embed_dec": truncated_normal(ks[j + 1], (cfg.vocab_size, cfg.d_embed), dt, 1.0),
+            "encoder": enc_layers,
+            "decoder": init_lstm_layer(ks[j + 2], cfg.d_embed, cfg.d_hidden, s, dt),
+            # Bahdanau attention (paper eq. 1-2)
+            "attn_ws": truncated_normal(ks[j + 3], (cfg.d_hidden, cfg.d_hidden), dt, s / np.sqrt(cfg.d_hidden)),
+            "attn_wh": truncated_normal(ks[j + 4], (cfg.d_hidden, cfg.d_hidden), dt, s / np.sqrt(cfg.d_hidden)),
+            "attn_v": truncated_normal(ks[j + 5], (cfg.d_hidden,), dt, s / np.sqrt(cfg.d_hidden)),
+            # output dense over [s_i; C_i] (paper eq. 4-5)
+            "out_w": truncated_normal(ks[j + 6], (2 * cfg.d_hidden, cfg.vocab_size), dt, s / np.sqrt(2 * cfg.d_hidden)),
+            "out_b": jnp.zeros((cfg.vocab_size,), dt),
+        }
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params: dict, enc_tokens: jax.Array):
+        """Returns (enc_hs (b, s, H), final_state, enc_mask (b, s))."""
+        cfg = self.cfg
+        x = jnp.take(params["embed_enc"], enc_tokens, axis=0)
+        b = x.shape[0]
+        state = LSTMState(
+            jnp.zeros((b, cfg.d_hidden), x.dtype), jnp.zeros((b, cfg.d_hidden), x.dtype)
+        )
+        hs = x
+        for layer in params["encoder"]:
+            hs, state = lstm_scan(layer, hs, LSTMState(jnp.zeros_like(state.h), jnp.zeros_like(state.c)))
+        mask = (enc_tokens != PAD)
+        return hs, state, mask
+
+    # -- Bahdanau attention --------------------------------------------------
+    def _attend(self, params: dict, s_i: jax.Array, enc_hs: jax.Array, enc_mask: jax.Array):
+        """s_i: (b, H); enc_hs: (b, s, H) -> context (b, H)."""
+        proj = (s_i @ params["attn_ws"])[:, None, :] + enc_hs @ params["attn_wh"]
+        e = jnp.tanh(proj.astype(jnp.float32)) @ params["attn_v"].astype(jnp.float32)  # (b, s)
+        e = jnp.where(enc_mask, e, -1e30)
+        a = jax.nn.softmax(e, axis=-1).astype(enc_hs.dtype)
+        return jnp.einsum("bs,bsh->bh", a, enc_hs)
+
+    # -- training forward (teacher forcing) ----------------------------------
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """batch: encoder_tokens (b, S), decoder_tokens (b, T).
+        Returns logits (b, T-1, V) predicting decoder_tokens[:, 1:]."""
+        enc_hs, state, enc_mask = self.encode(params, batch["encoder_tokens"])
+        dec_in = batch["decoder_tokens"][:, :-1]
+        x = jnp.take(params["embed_dec"], dec_in, axis=0)
+
+        def step(st, x_t):
+            st = lstm_cell(params["decoder"], x_t, st)
+            ctx = self._attend(params, st.h, enc_hs, enc_mask)
+            s_cat = jnp.concatenate([st.h, ctx], axis=-1)
+            logits = s_cat @ params["out_w"] + params["out_b"]
+            return st, logits
+
+        _, logits = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+        return jnp.moveaxis(logits, 0, 1)
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        logits = self.forward(params, batch).astype(jnp.float32)
+        targets = batch["decoder_tokens"][:, 1:]
+        mask = (targets != PAD).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+    # -- inference (paper Algorithm 3: greedy decode) -------------------------
+    def generate(self, params: dict, enc_tokens: jax.Array, max_len: int | None = None):
+        cfg = self.cfg
+        max_len = max_len or cfg.max_title_len
+        enc_hs, state, enc_mask = self.encode(params, enc_tokens)
+        b = enc_tokens.shape[0]
+
+        def step(carry, _):
+            st, tok, done = carry
+            x_t = jnp.take(params["embed_dec"], tok, axis=0)
+            st = lstm_cell(params["decoder"], x_t, st)
+            ctx = self._attend(params, st.h, enc_hs, enc_mask)
+            logits = jnp.concatenate([st.h, ctx], axis=-1) @ params["out_w"] + params["out_b"]
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(done, PAD, nxt)
+            done = done | (nxt == END)
+            return (st, nxt, done), nxt
+
+        init = (state, jnp.full((b,), START, jnp.int32), jnp.zeros((b,), bool))
+        _, toks = jax.lax.scan(step, init, None, length=max_len)
+        return jnp.moveaxis(toks, 0, 1)  # (b, max_len)

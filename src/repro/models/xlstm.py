@@ -1,0 +1,264 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+Both use exponential gating with a log-domain stabilizer ``m_t``:
+
+mLSTM (per head, head dim ``dh``):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    i'  = exp(i~_t - m_t);  f' = exp(f~_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T
+    n_t = f' n_{t-1} + i' k_t
+    h~  = C_t q_t / max(|n_t . q_t|, 1)
+
+sLSTM (per unit):
+    same stabilized gating on scalar memory c_t, normalizer n_t, with
+    recurrent gate contributions from h_{t-1}.
+
+Training/prefill runs ``jax.lax.scan`` over time (compiles to a single
+step body — sub-quadratic in sequence length); decode is one step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import truncated_normal
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (b, H, dh, dh)
+    n: jax.Array  # (b, H, dh)
+    m: jax.Array  # (b, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (b, dr)
+    n: jax.Array  # (b, dr)
+    m: jax.Array  # (b, dr)
+    h: jax.Array  # (b, dr) previous output (recurrent gates)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d, dr, h = cfg.d_model, cfg.resolved_d_rnn, cfg.n_heads
+    ku, kq, kk, kv, kg, kd = jax.random.split(key, 6)
+    s = cfg.init_scale / np.sqrt(d)
+    sr = cfg.init_scale / np.sqrt(dr)
+    return {
+        "w_up": truncated_normal(ku, (d, 2 * dr), dtype, s),
+        "w_q": truncated_normal(kq, (dr, dr), dtype, sr),
+        "w_k": truncated_normal(kk, (dr, dr), dtype, sr),
+        "w_v": truncated_normal(kv, (dr, dr), dtype, sr),
+        "w_if": truncated_normal(kg, (dr, 2 * h), dtype, sr),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]).astype(dtype),
+        "w_down": truncated_normal(kd, (dr, d), dtype, sr),
+    }
+
+
+def mlstm_axes(cfg) -> dict:
+    return {
+        "w_up": ("embed", "rnn"),
+        "w_q": ("rnn_in", "rnn"),
+        "w_k": ("rnn_in", "rnn"),
+        "w_v": ("rnn_in", "rnn"),
+        "w_if": ("rnn_in", None),
+        "b_if": (None,),
+        "w_down": ("rnn", "embed"),
+    }
+
+
+def _mlstm_inputs(p: dict, x: jax.Array, cfg):
+    d, dr, H = cfg.d_model, cfg.resolved_d_rnn, cfg.n_heads
+    dh = dr // H
+    up = x @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)  # (b,s,dr) each
+    q = (u @ p["w_q"]).reshape(*u.shape[:-1], H, dh)
+    k = (u @ p["w_k"]).reshape(*u.shape[:-1], H, dh) / np.sqrt(dh)
+    v = (u @ p["w_v"]).reshape(*u.shape[:-1], H, dh)
+    gates = (u @ p["w_if"] + p["b_if"]).astype(jnp.float32)  # (b,s,2H)
+    i_t, f_t = jnp.split(gates, 2, axis=-1)
+    return q, k, v, i_t, f_t, z
+
+
+def _mlstm_step(state: MLSTMState, qkvif) -> tuple[MLSTMState, jax.Array]:
+    q, k, v, i_t, f_t = qkvif  # q,k,v: (b,H,dh); i,f: (b,H)
+    qf, kf, vf = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + state.m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_log + state.m - m_new)
+    c = f_p[..., None, None] * state.c + i_p[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )
+    n = f_p[..., None] * state.n + i_p[..., None] * kf
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = jnp.einsum("bhvk,bhk->bhv", c, qf) / denom[..., None]
+    return MLSTMState(c, n, m_new), h
+
+
+# Sequence length from which the chunkwise formulation takes over. The
+# per-timestep scan materializes the (dh x dh) matrix memory every step —
+# O(s * dh^2) HBM traffic; the chunkwise form (identical math, see
+# _mlstm_chunk) materializes state once per chunk: O(s/L * dh^2) + an
+# O(s * L * dh) intra-chunk attention-like term. EXPERIMENTS.md §Perf
+# records the measured effect on the xlstm train_4k cell.
+CHUNK = 64
+
+
+def mlstm_scan(p, x, cfg, state: MLSTMState | None = None):
+    b, s = x.shape[0], x.shape[1]
+    if state is None:
+        state = init_mlstm_state(b, cfg)
+    if s >= 2 * CHUNK and s % CHUNK == 0:
+        return _mlstm_chunked(p, x, cfg, state, CHUNK)
+    q, k, v, i_t, f_t, z = _mlstm_inputs(p, x, cfg)
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (q, k, v, i_t, f_t))
+    final, hs = jax.lax.scan(_mlstm_step, state, xs)
+    hs = jnp.moveaxis(hs, 0, 1)  # (b, s, H, dh)
+    hs = hs.reshape(*hs.shape[:2], -1).astype(x.dtype)
+    y = (hs * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ p["w_down"]
+    return y, final
+
+
+def _mlstm_chunked(p, x, cfg, state: MLSTMState, L: int):
+    """Chunkwise-parallel mLSTM — exactly the per-step recurrence with the
+    stabilizer algebra unrolled per chunk:
+
+        m_t   = max(b_t + m_in, max_{j<=t}(b_t - b_j + i_j))
+        num_t = e^{b_t+m_in-m_t} C_in q_t + sum_j e^{b_t-b_j+i_j-m_t}(k_j.q_t) v_j
+        den_t = same with n_in / k_j
+        h_t   = num_t / max(|den_t|, 1)
+
+    (b_t = cumulative log-forget within the chunk; states carry the
+    exp(m) normalization exactly like the sequential scan)."""
+    b, s = x.shape[0], x.shape[1]
+    H = cfg.n_heads
+    q, k, v, i_t, f_t, z = _mlstm_inputs(p, x, cfg)
+    dh = q.shape[-1]
+    nC = s // L
+
+    # (b, s, H, dh) -> (nC, b, H, L, dh); gates (b, s, H) -> (nC, b, H, L)
+    def chunk_qkv(a):
+        return jnp.moveaxis(a.reshape(b, nC, L, H, dh), (1, 3), (0, 2))
+
+    def chunk_g(a):
+        return jnp.moveaxis(a.reshape(b, nC, L, H), (1, 3), (0, 2))
+
+    qc, kc, vc = chunk_qkv(q.astype(jnp.float32)), chunk_qkv(k.astype(jnp.float32)), chunk_qkv(v.astype(jnp.float32))
+    ic, fc = chunk_g(i_t), chunk_g(f_t)
+
+    def chunk_step(carry, inp):
+        C_in, n_in, m_in = carry
+        qb, kb, vb, ib, fb = inp  # (b,H,L,dh) / (b,H,L)
+        lf = jax.nn.log_sigmoid(fb)
+        b_cum = jnp.cumsum(lf, axis=-1)  # (b,H,L)
+        # running max of (i_j - b_j) over j<=t
+        rmax = jax.lax.cummax(ib - b_cum, axis=2)
+        m_t = jnp.maximum(b_cum + m_in[..., None], rmax + b_cum)
+        inter = jnp.exp(b_cum + m_in[..., None] - m_t)  # (b,H,L)
+        # intra decay matrix D (b,H,L,L): exp(b_t - m_t + i_j - b_j), j<=t
+        D = jnp.exp(
+            (b_cum - m_t)[..., :, None] + (ib - b_cum)[..., None, :]
+        )
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(mask, D, 0.0)
+        scores = jnp.einsum("bhld,bhmd->bhlm", qb, kb)  # (b,H,L,L) t x j
+        W = D * scores
+        # C layout matches the sequential scan: C[v_dim, k_dim]
+        num = inter[..., None] * jnp.einsum("bhld,bhvd->bhlv", qb, C_in) \
+            + jnp.einsum("bhlm,bhmv->bhlv", W, vb)
+        den = inter * jnp.einsum("bhld,bhd->bhl", qb, n_in) + W.sum(-1)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]  # (b,H,L,dh)
+        # state update (same algebra at t = L-1)
+        m_out = jnp.maximum(b_cum[..., -1] + m_in, rmax[..., -1] + b_cum[..., -1])
+        s_out = jnp.exp(b_cum[..., -1] + m_in - m_out)  # (b,H)
+        w_j = jnp.exp((b_cum[..., -1:] - b_cum) + ib - m_out[..., None])  # (b,H,L)
+        C_out = s_out[..., None, None] * C_in + jnp.einsum("bhl,bhld,bhlv->bhvd", w_j, kb, vb)
+        n_out = s_out[..., None] * n_in + jnp.einsum("bhl,bhld->bhd", w_j, kb)
+        return (C_out, n_out, m_out), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (state.c, state.n, state.m), (qc, kc, vc, ic, fc)
+    )
+    # hs: (nC, b, H, L, dh) -> (b, s, H*dh)
+    hs = jnp.moveaxis(hs, (0, 3), (1, 2)).reshape(b, s, H * dh).astype(x.dtype)
+    y = (hs * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ p["w_down"]
+    return y, MLSTMState(C, n, m)
+
+
+def init_mlstm_state(batch: int, cfg) -> MLSTMState:
+    dr, H = cfg.resolved_d_rnn, cfg.n_heads
+    dh = dr // H
+    return MLSTMState(
+        c=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    kw, kr, kd = jax.random.split(key, 3)
+    s = cfg.init_scale / np.sqrt(d)
+    sr = cfg.init_scale / np.sqrt(dr)
+    return {
+        "w": truncated_normal(kw, (d, 4 * dr), dtype, s),  # i,f,z,o from input
+        "r": truncated_normal(kr, (dr, 4 * dr), dtype, sr),  # recurrent
+        "b": jnp.zeros((4 * dr,), dtype),
+        "w_down": truncated_normal(kd, (dr, d), dtype, sr),
+    }
+
+
+def slstm_axes(cfg) -> dict:
+    return {
+        "w": ("embed", "rnn"),
+        "r": ("rnn_in", "rnn"),
+        "b": ("rnn",),
+        "w_down": ("rnn", "embed"),
+    }
+
+
+def _slstm_step_factory(p):
+    r = p["r"].astype(jnp.float32)
+
+    def step(state: SLSTMState, wx_t):
+        pre = wx_t.astype(jnp.float32) + state.h @ r
+        i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + state.m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_log + state.m - m_new)
+        c = f_p * state.c + i_p * jnp.tanh(z_t)
+        n = f_p * state.n + i_p
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, m_new, h), h
+
+    return step
+
+
+def slstm_scan(p, x, cfg, state: SLSTMState | None = None):
+    b = x.shape[0]
+    if state is None:
+        state = init_slstm_state(b, cfg)
+    wx = x @ p["w"] + p["b"]  # (b, s, 4dr)
+    final, hs = jax.lax.scan(_slstm_step_factory(p), state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return hs @ p["w_down"], final
+
+
+def init_slstm_state(batch: int, cfg) -> SLSTMState:
+    dr = cfg.resolved_d_rnn
+    z = jnp.zeros((batch, dr), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, dr), -1e30, jnp.float32), h=z)

@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure JAX,
+optax-style update API so optimizers compose with the train loop)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # moments dtype: fp32 masters by default; bf16 halves optimizer memory
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, count: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: (b1 * mm.astype(jnp.float32) + (1 - b1) * g).astype(self.moment_dtype), state.m, grads)
+        v = jax.tree.map(lambda vv, g: (b2 * vv.astype(jnp.float32) + (1 - b2) * g * g).astype(self.moment_dtype), state.v, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(p, mm, vv):
+            mhat = mm.astype(jnp.float32) / c1
+            vhat = vv.astype(jnp.float32) / c2
+            step = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(count, m, v), gnorm
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    def schedule(count: jax.Array) -> jax.Array:
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return schedule

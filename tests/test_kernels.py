@@ -1,0 +1,188 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle, sweeping
+shapes and dtypes (the kernels target TPU; interpret=True executes the
+kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lstm_cell.ops import lstm_cell_op
+from repro.kernels.lstm_cell.ref import lstm_cell_ref
+from repro.kernels.rg_lru.ops import rg_lru_op
+from repro.kernels.rg_lru.ref import rg_lru_ref
+from repro.kernels.text_clean.ops import clean_rows, pack_rows, text_clean_op
+from repro.kernels.text_clean.ref import text_clean_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, sq, skv, nq, nkv, hd, causal, window, blk)
+    (2, 128, 128, 4, 4, 64, True, 0, 64),
+    (1, 256, 256, 8, 2, 32, True, 0, 128),
+    (2, 128, 128, 4, 1, 64, True, 64, 64),   # MQA + sliding window
+    (1, 96, 96, 4, 4, 64, False, 0, 64),     # encoder (non-divisible seq)
+    (1, 200, 200, 2, 2, 128, True, 0, 128),  # padded seq
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c) for c in FLASH_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    b, sq, skv, nq, nkv, hd, causal, window, blk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, nq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, skv, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, skv, nkv, hd), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window,
+                             blk_q=blk, blk_k=blk, interpret=True)
+
+    def pack(x, h):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, x.shape[1], hd)
+
+    ref = flash_attention_ref(pack(q, nq), pack(k, nkv), pack(v, nkv),
+                              n_q_heads=nq, n_kv_heads=nkv, causal=causal, window=window)
+    ref = jnp.moveaxis(ref.reshape(b, nq, sq, hd), 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_flash_matches_model_sdpa():
+    from repro.models.attention import sdpa
+
+    q = jax.random.normal(KEY, (2, 64, 8, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 64, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 64, 2, 32))
+    out = flash_attention_op(q, k, v, causal=True, blk_q=32, blk_k=32, interpret=True)
+    ref = sdpa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rg_lru
+# ---------------------------------------------------------------------------
+
+RG_CASES = [
+    (1, 64, 32, 32, 32),
+    (2, 128, 256, 64, 128),
+    (3, 100, 48, 32, 16),  # non-divisible seq and d
+]
+
+
+@pytest.mark.parametrize("case", RG_CASES, ids=[str(c) for c in RG_CASES])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rg_lru(case, with_h0):
+    b, s, d, blk_s, blk_d = case
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d))) * 0.98
+    bb = jax.random.normal(ks[1], (b, s, d)) * 0.1
+    h0 = jax.random.normal(ks[2], (b, d)) if with_h0 else None
+    out = rg_lru_op(a, bb, h0, blk_s=blk_s, blk_d=blk_d, interpret=True)
+    ref = rg_lru_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_rg_lru_matches_model_scan():
+    """Kernel == the model's associative-scan training path."""
+    from repro.configs import get_smoke
+    from repro.models import rglru as RG
+
+    cfg = get_smoke("recurrentgemma_9b")
+    p = RG.init_rglru(KEY, cfg, jnp.float32)
+    u = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 32, cfg.resolved_d_rnn))
+    a, b = RG._gates(p, u)
+    href, _ = RG.rglru_scan(p, u)
+    hker = rg_lru_op(a, b, blk_s=16, blk_d=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(hker), np.asarray(href, np.float32), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+LSTM_CASES = [
+    (4, 16, 32, 4, 16),
+    (8, 64, 64, 8, 32),
+    (5, 24, 48, 8, 48),  # non-divisible batch
+]
+
+
+@pytest.mark.parametrize("case", LSTM_CASES, ids=[str(c) for c in LSTM_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell(case, dtype):
+    b, d_in, hidden, blk_b, blk_h = case
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, d_in), dtype)
+    h = jax.random.normal(ks[1], (b, hidden), dtype)
+    c = jax.random.normal(ks[2], (b, hidden), dtype)
+    params = {
+        "wx": jax.random.normal(ks[3], (d_in, 4 * hidden), dtype) * 0.1,
+        "wh": jax.random.normal(ks[4], (hidden, 4 * hidden), dtype) * 0.1,
+        "b": jax.random.normal(ks[5], (4 * hidden,), dtype) * 0.1,
+    }
+    ho, co = lstm_cell_op(x, h, c, params, blk_b=blk_b, blk_h=blk_h, interpret=True)
+    hr, cr = lstm_cell_ref(x, h, c,
+                           params["wx"].reshape(d_in, 4, hidden),
+                           params["wh"].reshape(hidden, 4, hidden),
+                           params["b"].reshape(4, hidden))
+    np.testing.assert_allclose(np.asarray(ho, np.float32), np.asarray(hr, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(co, np.float32), np.asarray(cr, np.float32), **tol(dtype))
+
+
+def test_lstm_cell_matches_model_cell():
+    from repro.models.seq2seq import LSTMState, init_lstm_layer, lstm_cell as model_cell
+
+    p = init_lstm_layer(KEY, 16, 32, 0.1, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 16))
+    h = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 32))
+    c = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 32))
+    ho, co = lstm_cell_op(x, h, c, p, blk_b=4, blk_h=32, interpret=True)
+    st = model_cell(p, x, LSTMState(h, c))
+    np.testing.assert_allclose(np.asarray(ho), np.asarray(st.h), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(co), np.asarray(st.c), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# text_clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("blk", [4, 64])
+def test_text_clean_vs_ref(blk):
+    rows = [
+        "Hello <b>World</b> 42!",
+        "plain text only",
+        "UPPER and (kept by kernel) 123",
+        "",
+    ] * 7
+    mat = pack_rows(rows)
+    out = text_clean_op(mat, blk_rows=blk, interpret=True)
+    ref = text_clean_ref(mat)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_text_clean_matches_host_stages():
+    """Device kernel == host ConvertToLower+RemoveHTMLTags+char-class LUT."""
+    from repro.core import bytesops as B
+
+    rows = ["Hello <i>World</i>, 42 Things!", "MiXeD CaSe <p>tag</p> end"]
+    out = clean_rows(rows, interpret=True)
+    expect = []
+    for r in rows:
+        buf = B.flatten([r])
+        buf = B.apply_lut(buf, B.LOWER_LUT)
+        buf = B.span_strip(buf, ord("<"), ord(">"))
+        buf = B.apply_lut(buf, B.UNWANTED_LUT)
+        buf = B.collapse_spaces(buf)
+        expect.append(B.unflatten(buf)[0])
+    assert out == expect

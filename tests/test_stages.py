@@ -1,0 +1,130 @@
+"""Unit + property tests: every vectorized stage == its row-wise oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bytesops as B
+from repro.core.stages import (
+    ConvertToLower,
+    RemoveHTMLTags,
+    RemoveShortWords,
+    RemoveUnwantedCharacters,
+    StopWordsRemover,
+    Tokenizer,
+    abstract_stages,
+    title_stages,
+)
+
+ALL_STAGES = [
+    ConvertToLower("c"),
+    RemoveHTMLTags("c"),
+    RemoveUnwantedCharacters("c"),
+    RemoveShortWords("c", threshold=1),
+    RemoveShortWords("c", threshold=3),
+    Tokenizer("c"),
+    StopWordsRemover("c"),
+]
+
+
+def apply_flat(stage, rows):
+    return B.unflatten(stage.transform_flat(B.flatten(rows)))
+
+
+def apply_oracle(stage, rows):
+    return [stage.transform_row(r) for r in rows]
+
+
+EXAMPLES = [
+    [],
+    [""],
+    ["", "", ""],
+    ["Hello World"],
+    ["a <b>bold</b> move", "no tags here"],
+    ["nested (paren (not)) ok" , "x (y) z"],
+    ["It's CAN'T won't they've", "she'd we're he's"],
+    ["UPPER lower MiXeD 123 !!!", "digits 42 and, punct; here."],
+    ["  leading and trailing  ", "multi   spaces    inside"],
+    ["a ab abc abcd abcde", "i of the and an it"],
+    ["the quick brown fox is over a lazy dog", "will not be removed maybe"],
+    ["<p>tag at start</p> mid <i>x</i> end", "(paren at start) mid (y) end"],
+    ["word", " ", "  ", "x"],
+]
+
+
+@pytest.mark.parametrize("stage", ALL_STAGES, ids=lambda s: f"{type(s).__name__}-{getattr(s,'threshold','')}")
+@pytest.mark.parametrize("rows", EXAMPLES, ids=range(len(EXAMPLES)))
+def test_stage_matches_oracle(stage, rows):
+    assert apply_flat(stage, rows) == apply_oracle(stage, rows)
+
+
+# -- property tests ---------------------------------------------------------
+
+# Contract alphabet: no <>() (span delimiters exercised separately with
+# balanced construction), no NUL.
+_plain = st.text(
+    alphabet=st.sampled_from("abcdefghij XYZ'.,;:!?0123456789-_/"), max_size=60
+)
+
+
+@st.composite
+def _balanced_rows(draw):
+    """Rows with balanced, non-nested tag and paren spans around plain text."""
+    n = draw(st.integers(0, 6))
+    rows = []
+    for _ in range(n):
+        parts = []
+        for _ in range(draw(st.integers(0, 4))):
+            kind = draw(st.integers(0, 2))
+            body = draw(_plain)
+            if kind == 0:
+                parts.append(body)
+            elif kind == 1:
+                parts.append(f"<{draw(_plain)}>")
+            else:
+                parts.append(f"({body})")
+        rows.append(" ".join(parts))
+    return rows
+
+
+@pytest.mark.parametrize("stage", ALL_STAGES, ids=lambda s: f"{type(s).__name__}-{getattr(s,'threshold','')}")
+@settings(max_examples=60, deadline=None)
+@given(rows=_balanced_rows())
+def test_stage_matches_oracle_property(stage, rows):
+    assert apply_flat(stage, rows) == apply_oracle(stage, rows)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=_balanced_rows())
+def test_full_chain_matches_oracle_and_fusion_is_exact(rows):
+    stages = abstract_stages("c") + []
+    buf = B.flatten(rows)
+    ops = [op for s in stages for op in s.flat_ops()]
+    unfused = B.unflatten(B.apply_ops(buf.copy(), ops))
+    fused = B.unflatten(B.apply_ops(buf.copy(), B.fuse_ops(ops)))
+    oracle = rows
+    for s in stages:
+        oracle = [s.transform_row(r) for r in oracle]
+    assert unfused == oracle
+    assert fused == oracle
+
+
+def test_row_count_invariant_on_malformed_spans():
+    # malformed rows must never swallow the row separator
+    rows = ["open < never closed", "stray > here", "((", "))", "<<>", "fine"]
+    for stage in (RemoveHTMLTags("c"), RemoveUnwantedCharacters("c")):
+        out = apply_flat(stage, rows)
+        assert len(out) == len(rows)
+
+
+def test_wordset_exactness():
+    ws = B.WordSet(["the", "a", "themselves", "yourselves", "yourself"])
+    rows = ["the them themselves themselvesx a ab yourselves yourself yourselfs"]
+    buf = B.remove_stopwords(B.flatten(rows), ws)
+    assert B.unflatten(buf) == ["them themselvesx ab yourselfs"]
+
+
+def test_stage_fit_returns_self():
+    st_ = ConvertToLower("c")
+    assert st_.fit(None) is st_

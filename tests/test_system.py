@@ -1,0 +1,139 @@
+"""End-to-end behaviour tests for the paper's system: corpus → P3SAPP
+pipeline → tokenizer → case-study model training → inference, plus the
+async loader and serving runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.p3sapp_summarizer import SMOKE as S2S
+from repro.core.async_loader import AsyncLoader, ShardPool
+from repro.core.p3sapp import run_p3sapp
+from repro.data.batching import batches, seq2seq_arrays, train_val_split
+from repro.data.synthetic import write_corpus
+from repro.data.tokenizer import END, PAD, START, WordTokenizer
+from repro.models.seq2seq import Seq2Seq
+from repro.optim.adamw import AdamW
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    d = tmp_path_factory.mktemp("e2e_corpus")
+    write_corpus(d, total_bytes=400_000, n_files=4, seed=11)
+    return d
+
+
+@pytest.fixture(scope="module")
+def cleaned(corpus):
+    records, timings = run_p3sapp([corpus], optimize=True)
+    assert timings.cumulative > 0
+    return records
+
+
+def test_pipeline_produces_clean_text(cleaned):
+    assert len(cleaned) > 100
+    for r in cleaned[:200]:
+        for field in ("title", "abstract"):
+            text = r[field]
+            assert text, "post-clean must remove empty rows"
+            assert text == text.lower()
+            assert "<" not in text and ">" not in text
+            assert not any(ch.isdigit() for ch in text)
+            assert "  " not in text
+
+
+def test_tokenizer_roundtrip(cleaned):
+    tok = WordTokenizer.fit((r["abstract"] for r in cleaned), vocab_size=512)
+    text = cleaned[0]["abstract"].split()[:10]
+    enc = tok.encode(" ".join(text), max_len=16)
+    dec = tok.decode(enc)
+    # every in-vocab word must roundtrip
+    for w, d in zip(text, dec.split()):
+        if w in tok.stoi:
+            assert w == d
+
+
+def test_seq2seq_trains_and_generates(cleaned):
+    tok = WordTokenizer.fit(
+        (r["abstract"] + " " + r["title"] for r in cleaned), vocab_size=S2S.vocab_size
+    )
+    arrs = seq2seq_arrays(cleaned, tok, S2S.max_abstract_len, S2S.max_title_len)
+    model = Seq2Seq(S2S)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=5e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, state, _ = opt.update(grads, state, params)
+        return params, state, loss
+
+    losses = []
+    for i, b in enumerate(batches(arrs, 16, seed=0)):
+        params, state, loss = step(params, state, b)
+        losses.append(float(loss))
+        if i >= 30:
+            break
+    assert losses[-1] < losses[0]
+
+    gen = model.generate(params, arrs["encoder_tokens"][:4])
+    assert gen.shape == (4, S2S.max_title_len)
+    assert np.asarray(gen).min() >= 0
+
+
+def test_async_loader_preserves_batches():
+    bs = [{"x": np.full((2, 2), i)} for i in range(10)]
+    out = list(AsyncLoader(iter(bs), prefetch=3))
+    assert len(out) == 10
+    got = sorted(int(np.asarray(b["x"])[0, 0]) for b in out)
+    assert got == list(range(10))
+
+
+def test_async_loader_propagates_errors():
+    def gen():
+        yield {"x": np.zeros(2)}
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        list(AsyncLoader(gen(), prefetch=1))
+
+
+def test_shard_pool_work_stealing(corpus):
+    from repro.core.ingest import list_shards
+
+    shards = list_shards([corpus])
+    seen = []
+
+    def process(path):
+        return path.name
+
+    pool = ShardPool(shards, process, n_readers=3)
+    results = list(pool)
+    assert sorted(results) == sorted(p.name for p in shards)
+
+
+def test_shard_pool_propagates_errors(corpus):
+    from repro.core.ingest import list_shards
+
+    def process(path):
+        raise ValueError("bad shard")
+
+    pool = ShardPool(list_shards([corpus]), process, n_readers=2)
+    with pytest.raises(ValueError):
+        list(pool)
+
+
+def test_device_cleaner_end_to_end(cleaned, corpus):
+    """On-device (interpret) cleaning path produces sane text."""
+    from repro.core.device_pipeline import device_case_study_cleaner
+    from repro.core.frame import ColumnarFrame
+
+    frame = ColumnarFrame.from_records(
+        [{"t": "Hello <b>World</b> 42 the a!"}, {"t": "MiXeD (x) CaSe"}], ["t"]
+    )
+    out = device_case_study_cleaner().transform(frame, ["t"])
+    vals = list(out["t"])
+    assert vals[0] == "hello world"  # lower+tags+digits+stopwords+short words
+    assert "mixed" in vals[1]
