@@ -1,11 +1,12 @@
 """Paper Table 4 / Figs. 9-10: cumulative (ingestion+preprocessing) time
-with trend-line slopes."""
+with trend-line slopes. P3SAPP runs as the lazy Dataset plan
+(paper-faithful executor, ``optimize=False``)."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.p3sapp import run_conventional, run_p3sapp
+from repro.core.p3sapp import p3sapp_dataset, run_conventional
 
 from .common import dataset_dirs, emit
 
@@ -14,7 +15,7 @@ def run(quick: bool = False) -> list[dict]:
     rows = []
     xs, ca_ys, pa_ys = [], [], []
     for ds_id, d, gb in dataset_dirs(quick):
-        _, tp = run_p3sapp([d], optimize=False)
+        _, tp = p3sapp_dataset([d]).execute(optimize=False)
         _, tc = run_conventional([d])
         xs.append(gb)
         ca_ys.append(tc.cumulative)

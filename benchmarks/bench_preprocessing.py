@@ -1,9 +1,13 @@
 """Paper Table 3 / Fig. 8: preprocessing time (pre-clean/clean/post-clean),
-CA vs P3SAPP, plus the beyond-paper fused executor."""
+CA vs P3SAPP, plus the beyond-paper planned/fused Dataset executor.
+
+Both P3SAPP rows run through the lazy ``Dataset`` plan: ``optimize=False``
+is the paper-faithful executor (no plan rewrites, per-stage ops), while
+``optimize=True`` is the planner's merged + fused path."""
 
 from __future__ import annotations
 
-from repro.core.p3sapp import run_conventional, run_p3sapp
+from repro.core.p3sapp import p3sapp_dataset, run_conventional
 
 from .common import dataset_dirs, emit
 
@@ -11,8 +15,8 @@ from .common import dataset_dirs, emit
 def run(quick: bool = False) -> list[dict]:
     rows = []
     for ds_id, d, gb in dataset_dirs(quick):
-        _, tp = run_p3sapp([d], optimize=False)  # paper-faithful executor
-        _, tf = run_p3sapp([d], optimize=True)  # beyond-paper fused
+        _, tp = p3sapp_dataset([d]).execute(optimize=False)  # paper-faithful
+        _, tf = p3sapp_dataset([d]).execute(optimize=True)  # planned/fused
         _, tc = run_conventional([d])
         rows.append({
             "name": "table3_preprocessing",

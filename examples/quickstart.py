@@ -1,16 +1,17 @@
-"""Quickstart: the paper's pipeline in 40 lines.
+"""Quickstart: the paper's pipeline as one lazy Dataset plan.
 
-Generates a small synthetic CORE-style corpus, runs the P3SAPP pipeline
-(ingest → pre-clean → Spark-ML-style stage pipeline → records), compares
-against the conventional approach, and prints the paper's headline
-numbers for this scale.
+Generates a small synthetic CORE-style corpus, declares the P3SAPP flow
+(ingest → pre-clean → stage chain → records) as a single declarative chain,
+prints the optimized plan, compares against the conventional approach, and
+prints the paper's headline numbers for this scale.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import tempfile
 
-from repro.core.p3sapp import record_match_accuracy, run_conventional, run_p3sapp
+from repro.core.dataset import Dataset
+from repro.core.p3sapp import case_study_stages, record_match_accuracy, run_conventional
 from repro.data.synthetic import write_corpus
 
 
@@ -19,7 +20,18 @@ def main() -> None:
     write_corpus(corpus, total_bytes=3_000_000, n_files=6, seed=42)
     print(f"corpus: {corpus}")
 
-    pa_records, t_pa = run_p3sapp([corpus], optimize=True)
+    # Nothing below executes until .execute(): the chain is a logical plan
+    # the planner fuses (per-column op chains) and reorders (filter pushdown).
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+    )
+    print(ds.explain())
+
+    pa_records, t_pa = ds.execute(optimize=True)
     ca_records, t_ca = run_conventional([corpus])
 
     print(f"\nP3SAPP : {t_pa.as_dict()}")

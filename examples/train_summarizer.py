@@ -1,8 +1,11 @@
 """End-to-end driver (paper case study): title generation from abstracts.
 
-Pipeline: synthetic CORE corpus → P3SAPP preprocessing → tokenizer →
-async double-buffered loader → LSTM seq2seq with Bahdanau attention →
-checkpointed training (resume-capable) → greedy inference samples.
+One declarative ``Dataset`` chain takes the synthetic CORE corpus all the
+way to device-resident batches — ingestion, pre-cleaning, the Spark-ML-style
+stage chain, tokenization, batching, and async prefetch are a single lazy
+plan the planner fuses and overlaps with device compute. The model side is
+an LSTM seq2seq with Bahdanau attention, checkpointed training
+(resume-capable), and greedy inference samples.
 
 Runs a few hundred steps on CPU by default:
 
@@ -12,16 +15,15 @@ Runs a few hundred steps on CPU by default:
 import argparse
 import tempfile
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.p3sapp_summarizer import CONFIG, SMOKE
-from repro.core.async_loader import AsyncLoader
-from repro.core.p3sapp import run_p3sapp
-from repro.data.batching import batches, seq2seq_arrays, train_val_split
+from repro.core.dataset import Dataset
+from repro.core.p3sapp import case_study_stages
+from repro.data.batching import seq2seq_specs
 from repro.data.synthetic import write_corpus
 from repro.data.tokenizer import WordTokenizer
 from repro.models.seq2seq import Seq2Seq
@@ -43,15 +45,33 @@ def main() -> None:
     write_corpus(corpus, total_bytes=int(args.corpus_mb * 1e6), n_files=8, seed=1)
 
     t0 = time.perf_counter()
-    records, timings = run_p3sapp([corpus], optimize=True)
+    # The full preprocessing flow is one lazy plan; nothing executes yet.
+    clean = (
+        Dataset.from_json_dirs([corpus])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+    )
+    records, timings = clean.execute(optimize=True)
     print(f"P3SAPP preprocessing: {timings.cumulative:.2f}s, {len(records)} records")
 
     tok = WordTokenizer.fit(
         (r["abstract"] + " " + r["title"] for r in records), vocab_size=cfg.vocab_size
     )
-    arrs = seq2seq_arrays(records, tok, cfg.max_abstract_len, cfg.max_title_len)
-    train, val = train_val_split(arrs, 0.1)
-    print(f"train={len(train['encoder_tokens'])} val={len(val['encoder_tokens'])}")
+    train_ds, val_ds = clean.split(val_fraction=0.1, seed=0)
+    specs = seq2seq_specs(cfg.max_abstract_len, cfg.max_title_len)
+    # ingest → dropna → apply → tokenize → batch → prefetch → device_batches:
+    # the cleaned frame is memoized, so this reuses the pass above.
+    loader = (
+        train_ds.tokenize(tok, specs)
+        .batch(args.batch_size, shuffle=True)
+        .prefetch(2)
+        .device_batches(epochs=None)
+    )
+    val = val_ds.tokenize(tok, specs).arrays()
+    n_train = len(records) - len(next(iter(val.values())))
+    print(f"train={n_train} val={len(next(iter(val.values())))}")
 
     model = Seq2Seq(cfg)
     opt = AdamW(learning_rate=warmup_cosine(3e-3, 20, args.steps), weight_decay=1e-4)
@@ -71,14 +91,10 @@ def main() -> None:
     if controller.resumed:
         print(f"resumed from step {controller.step}")
 
-    def batch_stream():
-        epoch = 0
-        while True:
-            yield from batches(train, args.batch_size, seed=epoch)
-            epoch += 1
-
-    loader = AsyncLoader(batch_stream(), prefetch=2)
-    history = controller.run(iter(loader), n_steps=args.steps)
+    try:
+        history = controller.run(iter(loader), n_steps=args.steps)
+    finally:
+        loader.close()  # endless epoch stream; stop the prefetch thread cleanly
     if history:
         print(f"step {history[0]['step']}: loss={history[0]['loss']:.3f}")
         print(f"step {history[-1]['step']}: loss={history[-1]['loss']:.3f}")

@@ -1,6 +1,7 @@
 """The paper's contribution: P3SAPP preprocessing pipeline.
 
 Public API:
+    Dataset                        — lazy plan: ingestion → device batches
     run_p3sapp / run_conventional  — Algorithm 1 / Algorithm 2 drivers
     Pipeline, stages               — Spark-ML-style transformer chain
     ColumnarFrame                  — the DataFrame analogue
@@ -8,10 +9,12 @@ Public API:
 """
 
 from .async_loader import AsyncLoader, ShardPool
+from .dataset import Dataset
 from .frame import ColumnarFrame
 from .p3sapp import (
     StageTimings,
     case_study_stages,
+    p3sapp_dataset,
     record_match_accuracy,
     run_conventional,
     run_p3sapp,

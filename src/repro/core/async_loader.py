@@ -27,6 +27,24 @@ import numpy as np
 _SENTINEL = object()
 
 
+def _put_cancellable(q: "queue.Queue", item, cancelled: threading.Event) -> None:
+    """Bounded put that gives up once the consumer cancelled the feed."""
+    while not cancelled.is_set():
+        try:
+            q.put(item, timeout=0.1)
+            return
+        except queue.Full:
+            continue
+
+
+def _drain(q: "queue.Queue") -> None:
+    while True:
+        try:
+            q.get_nowait()
+        except queue.Empty:
+            break
+
+
 class ShardPool:
     """Work-stealing shard reader: files → preprocessed record batches."""
 
@@ -43,6 +61,7 @@ class ShardPool:
         self._out: "queue.Queue[object]" = queue.Queue(maxsize=max_queue)
         self._process = process_shard
         self._errors: list[BaseException] = []
+        self._stopped = threading.Event()
         self._threads = [
             threading.Thread(target=self._worker, daemon=True) for _ in range(n_readers)
         ]
@@ -53,19 +72,29 @@ class ShardPool:
 
     def _worker(self) -> None:
         try:
-            while True:
+            while not self._stopped.is_set():
                 try:
                     shard = self._shards.get_nowait()
                 except queue.Empty:
                     break
-                self._out.put(self._process(shard))
+                _put_cancellable(self._out, self._process(shard), self._stopped)
         except BaseException as e:  # propagate to consumer
             self._errors.append(e)
         finally:
             with self._lock:
                 self._n_live -= 1
-                if self._n_live == 0:
-                    self._out.put(_SENTINEL)
+                last = self._n_live == 0
+            if last:
+                _put_cancellable(self._out, _SENTINEL, self._stopped)
+
+    def stop(self) -> None:
+        """Abandon remaining shards and unblock readers; safe to call after
+        breaking out of iteration early. Idempotent."""
+        self._stopped.set()
+        _drain(self._shards)
+        _drain(self._out)
+        for t in self._threads:
+            t.join(timeout=5.0)
 
     def __iter__(self) -> Iterator:
         while True:
@@ -89,18 +118,33 @@ class AsyncLoader:
         self._q: "queue.Queue[object]" = queue.Queue(maxsize=max(prefetch, 1))
         self._sharding = sharding
         self._err: list[BaseException] = []
+        self._closed = threading.Event()
 
         def fill() -> None:
             try:
                 for b in batches:
-                    self._q.put(b)
+                    _put_cancellable(self._q, b, self._closed)
+                    if self._closed.is_set():
+                        break
             except BaseException as e:
                 self._err.append(e)
             finally:
-                self._q.put(_SENTINEL)
+                # closing the source iterator runs its finalizers (e.g. a
+                # streaming generator shutting down its ShardPool)
+                close = getattr(batches, "close", None)
+                if close is not None:
+                    close()
+                _put_cancellable(self._q, _SENTINEL, self._closed)
 
         self._thread = threading.Thread(target=fill, daemon=True)
         self._thread.start()
+
+    def close(self) -> None:
+        """Stop the fill thread; safe after breaking out of iteration early
+        (e.g. a fixed-step training loop over an endless epoch stream)."""
+        self._closed.set()
+        _drain(self._q)  # a blocked put() wakes and sees the flag
+        self._thread.join(timeout=5.0)
 
     def __iter__(self) -> Iterator:
         pending = None

@@ -21,7 +21,7 @@ import json
 from pathlib import Path
 from typing import Sequence
 
-from .ingest import list_shards
+from .ingest import _normalize, list_shards
 from .stages import Stage
 
 
@@ -52,7 +52,9 @@ def ingest_conventional(
                 if not line:
                     continue
                 rec = json.loads(line)
-                rows.append({f: rec.get(f) for f in fields})
+                # Same NUL normalization as the columnar ingestion, so the
+                # CA oracle and the P3SAPP flat path see identical input.
+                rows.append({f: _normalize(rec.get(f)) for f in fields})
         data = data.append(RowFrame(rows))
     return data
 

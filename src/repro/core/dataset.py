@@ -1,0 +1,336 @@
+"""Lazy, Spark-DataFrame-style ``Dataset``: one declarative plan from JSON
+shards to device-resident batches.
+
+Builder methods append logical plan nodes (:mod:`repro.core.plan`) instead
+of executing; terminal actions hand the plan to the planner, which merges
+and fuses stage chains, pushes filters/projections toward the source, and
+picks whole-frame or streaming per-shard execution. One chain covers the
+whole paper pipeline *and* the model-input path::
+
+    loader = (Dataset.from_json_dirs([corpus])
+              .dropna().drop_duplicates()
+              .apply(*case_study_stages())
+              .dropna()
+              .tokenize(tok, seq2seq_specs())
+              .batch(32, shuffle=True)
+              .prefetch(2)
+              .device_batches())
+
+Terminals:
+
+* ``collect()`` / ``to_records()`` / ``execute()`` — whole-frame, with the
+  paper's :class:`~repro.core.plan.StageTimings` attribution.
+* ``arrays()`` — tokenized model-input arrays.
+* ``iter_batches()`` / ``device_batches()`` — batches; with ``.prefetch()``
+  in the chain and an un-materialized JSON source these stream per shard
+  over a work-stealing pool so host preprocessing overlaps device compute.
+
+Whole-frame results are memoized on the frame-level prefix, so fitting a
+tokenizer and then training off the same chain ingests/cleans only once.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any, Iterator, Sequence
+
+import numpy as np
+
+from ..data.batching import TokenSpec, batches as _array_batches
+from . import plan as P
+from .async_loader import AsyncLoader
+from .frame import ColumnarFrame
+from .stages import Stage
+
+
+class Dataset:
+    """Immutable handle on a logical preprocessing plan."""
+
+    def __init__(
+        self,
+        nodes: Sequence[P.PlanNode],
+        schema: Sequence[str],
+        parent: "Dataset | None" = None,
+    ):
+        self._nodes = tuple(nodes)
+        self.schema = tuple(schema)
+        self._parent = parent
+        self._frame_cache: dict[tuple, tuple[ColumnarFrame, P.StageTimings]] = {}
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_json_dirs(
+        cls, directories: Sequence[str | Path], fields: Sequence[str] = ("title", "abstract")
+    ) -> "Dataset":
+        node = P.SourceJsonDirs(tuple(str(d) for d in directories), tuple(fields))
+        return cls([node], fields)
+
+    @classmethod
+    def from_frame(cls, frame: ColumnarFrame) -> "Dataset":
+        return cls([P.SourceFrame(frame)], frame.field_names)
+
+    @classmethod
+    def from_records(cls, records: Sequence[dict], fields: Sequence[str]) -> "Dataset":
+        return cls.from_frame(ColumnarFrame.from_records(records, fields))
+
+    # -- plan builders (lazy) ----------------------------------------------
+    def _derive(self, node: P.PlanNode, schema: Sequence[str]) -> "Dataset":
+        if not P.is_frame_node(node):
+            pass  # array-level nodes may follow anything below
+        elif any(not P.is_frame_node(n) for n in self._nodes):
+            raise ValueError(
+                f"{type(node).__name__} is frame-level and must come before "
+                "tokenize/batch/prefetch"
+            )
+        return Dataset(self._nodes + (node,), schema, parent=self)
+
+    def _resolve_subset(self, subset: Sequence[str] | None) -> tuple[str, ...]:
+        cols = tuple(subset) if subset is not None else self.schema
+        unknown = [c for c in cols if c not in self.schema]
+        if unknown:
+            raise KeyError(f"unknown columns {unknown}; schema is {list(self.schema)}")
+        return cols
+
+    def select(self, fields: Sequence[str]) -> "Dataset":
+        fields = self._resolve_subset(fields)
+        return self._derive(P.Select(fields), fields)
+
+    def dropna(self, subset: Sequence[str] | None = None) -> "Dataset":
+        return self._derive(P.DropNA(self._resolve_subset(subset)), self.schema)
+
+    def drop_duplicates(self, subset: Sequence[str] | None = None) -> "Dataset":
+        return self._derive(P.DropDuplicates(self._resolve_subset(subset)), self.schema)
+
+    def apply(self, *stages: Stage) -> "Dataset":
+        if not stages:
+            return self
+        schema = list(self.schema)
+        for s in stages:
+            if s.input_col not in schema:
+                raise KeyError(
+                    f"stage {type(s).__name__} reads unknown column {s.input_col!r}"
+                )
+            if s.output_col not in schema:
+                schema.append(s.output_col)
+        return self._derive(P.ApplyStages(tuple(stages)), schema)
+
+    def split(self, val_fraction: float = 0.1, seed: int = 0) -> tuple["Dataset", "Dataset"]:
+        """(train, val) datasets over a deterministic row partition."""
+        train = self._derive(P.Split(val_fraction, seed, "train"), self.schema)
+        val = self._derive(P.Split(val_fraction, seed, "val"), self.schema)
+        return train, val
+
+    def tokenize(
+        self,
+        tokenizer: Any,
+        specs: Sequence[TokenSpec] | None = None,
+        *,
+        col: str | None = None,
+        max_len: int = 128,
+        add_start_end: bool = False,
+    ) -> "Dataset":
+        """Attach token encoding: either explicit ``specs`` or one ``col``."""
+        if specs is None:
+            if col is None:
+                raise ValueError("tokenize() needs specs=... or col=...")
+            specs = (TokenSpec(col, max_len, add_start_end=add_start_end),)
+        specs = tuple(specs)
+        for spec in specs:
+            if spec.column not in self.schema:
+                raise KeyError(f"tokenize spec reads unknown column {spec.column!r}")
+        return self._derive(P.Tokenize(tokenizer, specs), [s.name for s in specs])
+
+    def batch(
+        self,
+        batch_size: int,
+        *,
+        shuffle: bool = True,
+        seed: int = 0,
+        drop_remainder: bool = True,
+        pad_to: int | None = None,
+    ) -> "Dataset":
+        if not any(isinstance(n, P.Tokenize) for n in self._nodes):
+            raise ValueError("batch() requires .tokenize(...) earlier in the chain")
+        node = P.Batch(batch_size, shuffle, seed, drop_remainder, pad_to)
+        return self._derive(node, self.schema)
+
+    def prefetch(self, prefetch: int = 2, *, sharding: Any = None) -> "Dataset":
+        """Declare streaming intent: terminal batch iteration runs per-shard
+        over a work-stealing pool and feeds AsyncLoader with this depth."""
+        return self._derive(P.Prefetch(prefetch, sharding), self.schema)
+
+    # -- plan inspection ---------------------------------------------------
+    @property
+    def plan(self) -> tuple[P.PlanNode, ...]:
+        return self._nodes
+
+    def optimized_plan(self) -> list[P.PlanNode]:
+        frame_nodes, array_nodes = P.split_plan(self._nodes)
+        return P.optimize_plan(frame_nodes, self._needed_columns()) + array_nodes
+
+    def explain(self) -> str:
+        return P.explain(self._nodes, self._needed_columns())
+
+    # -- execution helpers -------------------------------------------------
+    def _frame_prefix_dataset(self) -> "Dataset":
+        """Nearest ancestor whose plan is entirely frame-level."""
+        ds: Dataset = self
+        while ds._nodes and not P.is_frame_node(ds._nodes[-1]):
+            assert ds._parent is not None
+            ds = ds._parent
+        return ds
+
+    def _frame_schema(self) -> tuple[str, ...]:
+        return self._frame_prefix_dataset().schema
+
+    def _needed_columns(self) -> tuple[str, ...]:
+        """Columns the terminal actually consumes: with a Tokenize node only
+        its spec columns are live, letting the planner project the source
+        down to them (streaming path; the whole-frame cache stays full-width
+        because it is shared across terminals)."""
+        tok = next((n for n in self._nodes if isinstance(n, P.Tokenize)), None)
+        if tok is not None:
+            return tuple(dict.fromkeys(spec.column for spec in tok.specs))
+        return self._frame_schema()
+
+    def _materialize(
+        self, workers: int, optimize: bool
+    ) -> tuple[ColumnarFrame, P.StageTimings]:
+        owner = self._frame_prefix_dataset()
+        key = (workers, optimize)
+        hit = owner._frame_cache.get(key)
+        if hit is not None:
+            return hit
+        # Resume from the deepest memoized ancestor prefix, if any: a chain
+        # like clean.split() then re-runs only the cheap suffix nodes.
+        base: tuple[ColumnarFrame, P.StageTimings] | None = None
+        base_len = 0
+        ds = owner._parent
+        while ds is not None:
+            cached = ds._frame_cache.get(key)
+            if cached is not None:
+                base, base_len = cached, len(ds._nodes)
+                break
+            ds = ds._parent
+        if base is None:
+            hit = P.execute_frame_plan(
+                owner._nodes, workers=workers, optimize=optimize, final_schema=owner.schema
+            )
+        else:
+            suffix = owner._nodes[base_len:]
+            seen_cleaning = any(
+                isinstance(n, P.ApplyStages) for n in owner._nodes[:base_len]
+            )
+            hit = P.continue_frame_plan(
+                base[0], base[1], suffix,
+                workers=workers, optimize=optimize, seen_cleaning=seen_cleaning,
+            )
+        owner._frame_cache[key] = hit
+        return hit
+
+    def _array_nodes(self) -> list[P.PlanNode]:
+        return [n for n in self._nodes if not P.is_frame_node(n)]
+
+    def _batch_node(self) -> P.Batch:
+        node = next((n for n in self._nodes if isinstance(n, P.Batch)), None)
+        if node is None:
+            raise ValueError("no .batch(...) in the plan")
+        return node
+
+    def _streaming(self) -> bool:
+        if not any(isinstance(n, P.Prefetch) for n in self._nodes):
+            return False
+        owner = self._frame_prefix_dataset()
+        if owner._frame_cache:  # already materialized — reuse, don't re-read
+            return False
+        return isinstance(self._nodes[0], P.SourceJsonDirs) and not any(
+            isinstance(n, P.Split) for n in self._nodes
+        )
+
+    # -- terminal actions --------------------------------------------------
+    def collect(self, *, workers: int = 1, optimize: bool = True) -> ColumnarFrame:
+        """Materialize the frame (plan must be frame-level only)."""
+        if self._array_nodes():
+            raise ValueError("collect() on a tokenized plan; use arrays()/iter_batches()")
+        return self._materialize(workers, optimize)[0]
+
+    def execute(
+        self, *, workers: int = 1, optimize: bool = True
+    ) -> tuple[list[dict], P.StageTimings]:
+        """(records, StageTimings) — the legacy ``run_p3sapp`` contract."""
+        if self._array_nodes():
+            raise ValueError(
+                "execute()/to_records() on a tokenized plan; use arrays()/iter_batches()"
+            )
+        frame, t = self._materialize(workers, optimize)
+        t = P.StageTimings(**{k: getattr(t, k) for k in
+                              ("ingestion", "pre_cleaning", "cleaning", "post_cleaning")})
+        t0 = time.perf_counter()
+        records = frame.to_records()
+        t.post_cleaning += time.perf_counter() - t0
+        return records, t
+
+    def to_records(self, *, workers: int = 1, optimize: bool = True) -> list[dict]:
+        return self.execute(workers=workers, optimize=optimize)[0]
+
+    def arrays(self, *, workers: int = 1, optimize: bool = True) -> dict[str, np.ndarray]:
+        """Materialize tokenized model-input arrays whole-frame."""
+        frame, _ = self._materialize(workers, optimize)
+        return P.execute_array_nodes(frame, self._array_nodes())
+
+    def iter_batches(
+        self,
+        *,
+        workers: int = 1,
+        optimize: bool = True,
+        epochs: int | None = 1,
+        shuffle_buffer: int | None = None,
+    ) -> Iterator[dict[str, np.ndarray]]:
+        """Batch iterator; streams per shard when ``.prefetch()`` is declared
+        and the source has not already been materialized."""
+        batch = self._batch_node()
+        if self._streaming():
+            yield from P.stream_batches(
+                self._nodes,
+                workers=max(workers, 2),
+                optimize=optimize,
+                epochs=epochs,
+                shuffle_buffer=shuffle_buffer,
+                final_schema=self._needed_columns(),
+            )
+            return
+        arrays = self.arrays(workers=workers, optimize=optimize)
+        epoch = 0
+        while epochs is None or epoch < epochs:
+            produced = 0
+            for b in _array_batches(
+                arrays,
+                batch.batch_size,
+                shuffle=batch.shuffle,
+                seed=batch.seed + epoch,
+                drop_remainder=batch.drop_remainder,
+                pad_to=batch.pad_to,
+            ):
+                produced += 1
+                yield b
+            if not produced:
+                return  # empty epoch: stop instead of spinning forever
+            epoch += 1
+
+    def device_batches(
+        self,
+        *,
+        workers: int = 1,
+        optimize: bool = True,
+        epochs: int | None = 1,
+        prefetch: int | None = None,
+        sharding: Any = None,
+    ) -> AsyncLoader:
+        """Terminal: batches prefetched onto device via AsyncLoader, so host
+        preprocessing overlaps device compute end-to-end."""
+        node = next((n for n in self._nodes if isinstance(n, P.Prefetch)), None)
+        depth = prefetch if prefetch is not None else (node.prefetch if node else 2)
+        shard = sharding if sharding is not None else (node.sharding if node else None)
+        it = self.iter_batches(workers=workers, optimize=optimize, epochs=epochs)
+        return AsyncLoader(it, prefetch=depth, sharding=shard)

@@ -88,6 +88,14 @@ class ColumnarFrame:
                 seen.add(key)
         return self.take(keep)
 
+    def ensure_column(self, col: str) -> "ColumnarFrame":
+        """Frame with ``col`` present (empty strings when newly created)."""
+        if col in self.columns:
+            return self
+        cols = dict(self.columns)
+        cols[col] = np.array([""] * self._n, dtype=object)
+        return ColumnarFrame(cols)
+
     # -- flat-buffer access (pipeline execution) ----------------------------
     def flat(self, col: str) -> np.ndarray:
         vals = ["" if v is None else str(v).replace("\x00", " ") for v in self.columns[col]]

@@ -1,8 +1,9 @@
 """P3SAPP data ingestion (paper Algorithm 1, steps 1-10).
 
 Spark-SQL-JSON analogue: every shard file is parsed straight into columnar
-buffers (orjson → object arrays), shards are unioned columnar-cheaply, and
-the pre-cleaning steps (null drop, dedup) are frame-level vector ops.
+buffers (orjson when available, stdlib json otherwise → object arrays),
+shards are unioned columnar-cheaply, and the pre-cleaning steps (null drop,
+dedup) are frame-level vector ops.
 
 File-level parallelism (Spark partitions == files) is exposed through a
 process pool; on this 1-core container it degrades gracefully to serial.
@@ -16,9 +17,28 @@ from pathlib import Path
 from typing import Iterable, Sequence
 
 import numpy as np
-import orjson
+
+try:  # orjson is the fast path; stdlib json keeps bare environments working
+    import orjson as _json
+
+    _loads = _json.loads
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare envs
+    import json as _json
+
+    _loads = _json.loads
 
 from .frame import ColumnarFrame
+
+
+def _normalize(value):
+    """NUL bytes cannot survive into the columnar engine (ROW_SEP is \\x00).
+
+    Normalizing here — once, at ingestion — keeps the P3SAPP flat path and
+    the row-wise CA oracle looking at identical text.
+    """
+    if isinstance(value, str) and "\x00" in value:
+        return value.replace("\x00", " ")
+    return value
 
 
 def _parse_file(args) -> dict[str, list]:
@@ -29,10 +49,16 @@ def _parse_file(args) -> dict[str, list]:
             line = line.strip()
             if not line:
                 continue
-            rec = orjson.loads(line)
+            rec = _loads(line)
             for f in fields:
-                cols[f].append(rec.get(f))
+                cols[f].append(_normalize(rec.get(f)))
     return cols
+
+
+def parse_shard(path: str | Path, fields: Sequence[str]) -> ColumnarFrame:
+    """Parse one shard file into a ColumnarFrame (streaming-executor unit)."""
+    cols = _parse_file((str(path), tuple(fields)))
+    return ColumnarFrame({f: np.array(cols[f], dtype=object) for f in fields})
 
 
 def list_shards(directories: Sequence[str | Path]) -> list[Path]:

@@ -1,4 +1,16 @@
-"""End-to-end P3SAPP and CA drivers with the paper's stage-level timing.
+"""P3SAPP and CA drivers — thin adapters over the lazy ``Dataset`` planner.
+
+``run_p3sapp`` (Algorithm 1) is now *one declarative plan*: it builds the
+canonical chain
+
+    Dataset.from_json_dirs → dropna → drop_duplicates → apply(stages) → dropna
+
+and lets the planner (:mod:`repro.core.plan`) merge the stage chains per
+column, fuse their byte ops Catalyst-style, and execute whole-frame with the
+paper's stage-level timing attribution. The same plan, extended with
+``.tokenize(...).batch(...).prefetch(...)``, streams straight to device
+batches (see :mod:`repro.core.dataset`) — the paper's utilization argument
+applied to the full path, not just the cleaning segment.
 
 Timing attribution follows §3 of the paper exactly:
 
@@ -18,46 +30,43 @@ post-cleaning  steps 15-16 (toPandas)   step 14
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Sequence
 
 from . import conventional as ca
-from . import ingest as ing
-from .frame import ColumnarFrame
-from .pipeline import Pipeline
+from .dataset import Dataset
+from .plan import StageTimings  # re-exported; canonical home is the planner
 from .stages import Stage, abstract_stages, title_stages
 
-
-@dataclass
-class StageTimings:
-    ingestion: float = 0.0
-    pre_cleaning: float = 0.0
-    cleaning: float = 0.0
-    post_cleaning: float = 0.0
-
-    @property
-    def preprocessing(self) -> float:
-        return self.pre_cleaning + self.cleaning + self.post_cleaning
-
-    @property
-    def cumulative(self) -> float:
-        return self.ingestion + self.preprocessing
-
-    def as_dict(self) -> dict:
-        return {
-            "ingestion": self.ingestion,
-            "pre_cleaning": self.pre_cleaning,
-            "cleaning": self.cleaning,
-            "post_cleaning": self.post_cleaning,
-            "preprocessing": self.preprocessing,
-            "cumulative": self.cumulative,
-        }
+__all__ = [
+    "StageTimings",
+    "case_study_stages",
+    "p3sapp_dataset",
+    "record_match_accuracy",
+    "run_conventional",
+    "run_p3sapp",
+]
 
 
 def case_study_stages(abstract_col: str = "abstract", title_col: str = "title") -> list[Stage]:
     """Paper Fig. 2 + Fig. 3 workflows chained into one pipeline."""
     return abstract_stages(abstract_col) + title_stages(title_col)
+
+
+def p3sapp_dataset(
+    directories: Sequence[str | Path],
+    fields: Sequence[str] = ("title", "abstract"),
+    stages: Sequence[Stage] | None = None,
+) -> Dataset:
+    """The canonical Algorithm 1 chain as a lazy Dataset plan."""
+    stages = list(stages) if stages is not None else case_study_stages()
+    return (
+        Dataset.from_json_dirs(directories, fields)  # steps 2-8
+        .dropna(fields)  # step 9
+        .drop_duplicates(fields)  # step 10
+        .apply(*stages)  # steps 11-14
+        .dropna(fields)  # step 16
+    )
 
 
 def run_p3sapp(
@@ -70,29 +79,10 @@ def run_p3sapp(
     """Algorithm 1. Returns (records a.k.a. the pandas frame, timings).
 
     ``optimize=False`` is the paper-faithful executor; ``optimize=True``
-    enables the beyond-paper fused executor (EXPERIMENTS.md §Perf).
+    enables the beyond-paper planned/fused executor (EXPERIMENTS.md §Perf).
     """
-    t = StageTimings()
-    stages = list(stages) if stages is not None else case_study_stages()
-
-    t0 = time.perf_counter()
-    frame = ing.ingest(directories, fields, workers=workers)  # steps 2-8
-    t.ingestion = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    frame = ing.pre_clean(frame, fields)  # steps 9-10
-    t.pre_cleaning = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    model = Pipeline(stages).fit(frame)  # steps 11-13
-    frame = model.transform(frame, workers=workers, optimize=optimize)  # step 14
-    t.cleaning = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    records = frame.to_records()  # step 15 (toPandas analogue)
-    records = [r for r in records if all(r.get(f) for f in fields)]  # step 16
-    t.post_cleaning = time.perf_counter() - t0
-    return records, t
+    ds = p3sapp_dataset(directories, fields, stages)
+    return ds.execute(workers=workers, optimize=optimize)
 
 
 def run_conventional(

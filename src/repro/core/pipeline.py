@@ -8,6 +8,12 @@ Fidelity to the paper (Algorithm 1, steps 11-14):
   that contains only transformers),
 * ``PipelineModel.transform`` runs all stages (step 14).
 
+Both classes are thin adapters over the lazy plan machinery: a
+``PipelineModel`` compiles its stages into per-column op plans
+(``column_plans``) and hands them to :func:`run_column_plans`, the same
+physical executor the ``Dataset`` planner (:mod:`repro.core.plan`) uses for
+its ``ApplyStages`` nodes.
+
 Execution model — the P3SAPP speedup: per *column* we flatten once into a
 byte buffer, run that column's stage chain as vectorized passes, and
 unflatten once. Two executor modes:
@@ -33,6 +39,10 @@ import numpy as np
 from . import bytesops as B
 from .frame import ColumnarFrame
 from .stages import Stage
+
+# One compiled per-column execution unit: read input_col, run ops, write
+# output_col. The plan optimizer and the streaming executor share this form.
+ColumnPlan = tuple[str, str, list[B.Op]]
 
 
 class Pipeline:
@@ -60,70 +70,75 @@ def _run_ops(args) -> np.ndarray:
     return B.apply_ops(buf, ops)
 
 
+def compile_column_plans(
+    stages: Sequence[Stage], optimize: bool
+) -> list[ColumnPlan]:
+    """Ordered (input_col, output_col, ops) execution plans for a stage chain.
+
+    Consecutive stages reading/writing the same column merge into one plan;
+    a stage with ``output_col != input_col`` forks a new plan fed by the
+    current state of its input column.
+    """
+    plans: list[ColumnPlan] = []
+    current: dict[str, int] = {}  # column -> index of its live plan
+    for s in stages:
+        ops = s.flat_ops()
+        if s.input_col not in current:
+            plans.append((s.input_col, s.input_col, []))
+            current[s.input_col] = len(plans) - 1
+        if s.output_col == s.input_col:
+            plans[current[s.input_col]][2].extend(ops)
+        else:
+            src_plan = current[s.input_col]
+            plans.append((plans[src_plan][1], s.output_col, list(ops)))
+            current[s.output_col] = len(plans) - 1
+            # Seal the source plan: later stages on input_col must not
+            # retroactively change what this fork read (Spark order
+            # semantics) — they start a fresh plan instead.
+            current.pop(s.input_col, None)
+    if optimize:
+        plans = [(i, o, B.fuse_ops(ops)) for i, o, ops in plans]
+    return plans
+
+
+def run_column_plans(
+    frame: ColumnarFrame, plans: Sequence[ColumnPlan], workers: int = 1
+) -> ColumnarFrame:
+    """Physical executor: flatten each input column once, run its fused op
+    chain (optionally fanned out over a process pool), unflatten once."""
+    bufs: dict[str, np.ndarray] = {}
+    out = frame
+    pool = ProcessPoolExecutor(max_workers=workers) if workers > 1 else None
+    try:
+        for in_col, out_col, ops in plans:
+            src = bufs.get(in_col)
+            if src is None:
+                src = frame.flat(in_col)
+            if pool is None:
+                res = _run_ops((ops, src))
+            else:
+                chunks = _split_on_rows(src, workers)
+                parts = list(pool.map(_run_ops, [(ops, c) for c in chunks]))
+                res = np.concatenate(parts) if parts else src
+            bufs[out_col] = res
+            out = out.ensure_column(out_col).with_flat(out_col, res)
+    finally:
+        if pool is not None:
+            pool.shutdown()
+    return out
+
+
 class PipelineModel:
     def __init__(self, stages: Sequence[Stage]):
         self.stages = list(stages)
 
-    def column_plans(self, optimize: bool) -> list[tuple[str, str, list[B.Op]]]:
-        """Ordered (input_col, output_col, ops) execution plans.
-
-        Consecutive stages reading/writing the same column merge into one
-        plan; a stage with ``output_col != input_col`` forks a new plan fed
-        by the current state of its input column.
-        """
-        plans: list[tuple[str, str, list[B.Op]]] = []
-        current: dict[str, int] = {}  # column -> index of its live plan
-        for s in self.stages:
-            ops = s.flat_ops()
-            if s.input_col not in current:
-                plans.append((s.input_col, s.input_col, []))
-                current[s.input_col] = len(plans) - 1
-            if s.output_col == s.input_col:
-                plans[current[s.input_col]][2].extend(ops)
-            else:
-                src_plan = current[s.input_col]
-                plans.append((plans[src_plan][1], s.output_col, list(ops)))
-                current[s.output_col] = len(plans) - 1
-                # Seal the source plan: later stages on input_col must not
-                # retroactively change what this fork read (Spark order
-                # semantics) — they start a fresh plan instead.
-                current.pop(s.input_col, None)
-        if optimize:
-            plans = [(i, o, B.fuse_ops(ops)) for i, o, ops in plans]
-        return plans
+    def column_plans(self, optimize: bool) -> list[ColumnPlan]:
+        return compile_column_plans(self.stages, optimize)
 
     def transform(
         self, frame: ColumnarFrame, workers: int = 1, optimize: bool = True
     ) -> ColumnarFrame:
-        plans = self.column_plans(optimize)
-        bufs: dict[str, np.ndarray] = {}
-        out = frame
-        pool = ProcessPoolExecutor(max_workers=workers) if workers > 1 else None
-        try:
-            for in_col, out_col, ops in plans:
-                src = bufs.get(in_col)
-                if src is None:
-                    src = frame.flat(in_col)
-                if pool is None:
-                    res = _run_ops((ops, src))
-                else:
-                    chunks = _split_on_rows(src, workers)
-                    parts = list(pool.map(_run_ops, [(ops, c) for c in chunks]))
-                    res = np.concatenate(parts) if parts else src
-                bufs[out_col] = res
-                out = _ensure_col(out, out_col).with_flat(out_col, res)
-        finally:
-            if pool is not None:
-                pool.shutdown()
-        return out
-
-
-def _ensure_col(frame: ColumnarFrame, col: str) -> ColumnarFrame:
-    if col in frame.columns:
-        return frame
-    cols = dict(frame.columns)
-    cols[col] = np.array([""] * len(frame), dtype=object)
-    return ColumnarFrame(cols)
+        return run_column_plans(frame, self.column_plans(optimize), workers)
 
 
 def default_workers() -> int:

@@ -1,12 +1,73 @@
-"""Batching utilities: cleaned records → fixed-shape model inputs."""
+"""Batching operators: cleaned text columns → fixed-shape model inputs.
+
+These are the array-level operators of the lazy ``Dataset`` plan
+(:mod:`repro.core.dataset`): a ``TokenSpec`` describes how one text column
+becomes one token array, ``encode_column`` executes it, and ``batches``
+slices the resulting arrays into fixed-shape batches (with optional
+remainder padding for jit shape stability). The legacy eager helpers
+(``seq2seq_arrays``, ``train_val_split``) remain as thin wrappers.
+"""
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Iterator, Sequence
 
 import numpy as np
 
 from .tokenizer import PAD, WordTokenizer
+
+
+@dataclass(frozen=True)
+class TokenSpec:
+    """One text column → one fixed-length token array."""
+
+    column: str
+    max_len: int
+    out: str | None = None  # output array name; default "<column>_tokens"
+    add_start_end: bool = False
+
+    @property
+    def name(self) -> str:
+        return self.out or f"{self.column}_tokens"
+
+
+def seq2seq_specs(
+    max_abstract_len: int = 128,
+    max_title_len: int = 24,
+    abstract_col: str = "abstract",
+    title_col: str = "title",
+) -> tuple[TokenSpec, TokenSpec]:
+    """The case-study encoding: abstract → encoder input, title → target."""
+    return (
+        TokenSpec(abstract_col, max_abstract_len, out="encoder_tokens"),
+        TokenSpec(title_col, max_title_len, out="decoder_tokens", add_start_end=True),
+    )
+
+
+def encode_column(
+    texts: Sequence[str | None],
+    tokenizer: WordTokenizer,
+    max_len: int,
+    add_start_end: bool = False,
+) -> np.ndarray:
+    out = np.zeros((len(texts), max_len), dtype=np.int32)
+    for i, t in enumerate(texts):
+        out[i] = tokenizer.encode(t or "", max_len, add_start_end=add_start_end)
+    return out
+
+
+def encode_frame_columns(
+    columns: dict[str, Sequence[str | None]],
+    tokenizer: WordTokenizer,
+    specs: Sequence[TokenSpec],
+) -> dict[str, np.ndarray]:
+    return {
+        spec.name: encode_column(
+            columns[spec.column], tokenizer, spec.max_len, spec.add_start_end
+        )
+        for spec in specs
+    }
 
 
 def seq2seq_arrays(
@@ -18,13 +79,25 @@ def seq2seq_arrays(
     title_col: str = "title",
 ) -> dict[str, np.ndarray]:
     """Encode abstract (encoder input) and title (decoder target)."""
-    n = len(records)
-    enc = np.zeros((n, max_abstract_len), dtype=np.int32)
-    dec = np.zeros((n, max_title_len), dtype=np.int32)
-    for i, r in enumerate(records):
-        enc[i] = tokenizer.encode(r[abstract_col] or "", max_abstract_len)
-        dec[i] = tokenizer.encode(r[title_col] or "", max_title_len, add_start_end=True)
-    return {"encoder_tokens": enc, "decoder_tokens": dec}
+    specs = seq2seq_specs(max_abstract_len, max_title_len, abstract_col, title_col)
+    columns = {
+        abstract_col: [r.get(abstract_col) for r in records],
+        title_col: [r.get(title_col) for r in records],
+    }
+    return encode_frame_columns(columns, tokenizer, specs)
+
+
+def pad_batch(batch: dict[str, np.ndarray], rows: int) -> dict[str, np.ndarray]:
+    """Pad a partial batch with PAD rows up to ``rows`` (shape stability)."""
+    n = len(next(iter(batch.values())))
+    if n >= rows:
+        return batch
+    out = {}
+    for k, v in batch.items():
+        padded = np.full((rows,) + v.shape[1:], PAD, dtype=v.dtype)
+        padded[:n] = v
+        out[k] = padded
+    return out
 
 
 def batches(
@@ -34,25 +107,38 @@ def batches(
     shuffle: bool = True,
     seed: int = 0,
     drop_remainder: bool = True,
+    pad_to: int | None = None,
 ) -> Iterator[dict[str, np.ndarray]]:
+    """Fixed-size batches; a ``pad_to`` remainder is padded instead of dropped."""
     n = len(next(iter(arrays.values())))
     idx = np.arange(n)
     if shuffle:
         np.random.default_rng(seed).shuffle(idx)
-    stop = (n // batch_size) * batch_size if drop_remainder else n
+    stop = (n // batch_size) * batch_size if drop_remainder and pad_to is None else n
     for s in range(0, stop, batch_size):
         sel = idx[s : s + batch_size]
-        yield {k: v[sel] for k, v in arrays.items()}
+        batch = {k: v[sel] for k, v in arrays.items()}
+        if pad_to is not None and len(sel) < batch_size:
+            batch = pad_batch(batch, pad_to)
+        yield batch
+
+
+def split_indices(
+    n: int, val_fraction: float, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """(train, val) index partition — the one split rule shared by
+    ``train_val_split`` and ``Dataset.split``."""
+    idx = np.arange(n)
+    np.random.default_rng(seed).shuffle(idx)
+    n_val = max(int(n * val_fraction), 1) if n else 0
+    return idx[n_val:], idx[:n_val]
 
 
 def train_val_split(
     arrays: dict[str, np.ndarray], val_fraction: float = 0.1, seed: int = 0
 ) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
     n = len(next(iter(arrays.values())))
-    idx = np.arange(n)
-    np.random.default_rng(seed).shuffle(idx)
-    n_val = max(int(n * val_fraction), 1)
-    val, train = idx[:n_val], idx[n_val:]
+    train, val = split_indices(n, val_fraction, seed)
     return (
         {k: v[train] for k, v in arrays.items()},
         {k: v[val] for k, v in arrays.items()},

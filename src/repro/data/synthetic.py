@@ -23,7 +23,17 @@ import random
 from pathlib import Path
 from typing import Iterator
 
-import orjson
+try:  # fast path; stdlib fallback keeps bare environments working
+    import orjson
+
+    def _dumps(obj) -> bytes:
+        return orjson.dumps(obj)
+
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare envs
+    import json
+
+    def _dumps(obj) -> bytes:
+        return json.dumps(obj, separators=(",", ":")).encode()
 
 _SYLLABLES = (
     "al an ar as at con cor de den der dis ec en er es ex for gen ic il in "
@@ -166,7 +176,7 @@ def write_corpus(
         written = 0
         with open(p, "wb") as fh:
             while written < budget:
-                line = orjson.dumps(next(it)) + b"\n"
+                line = _dumps(next(it)) + b"\n"
                 fh.write(line)
                 written += len(line)
         paths.append(p)

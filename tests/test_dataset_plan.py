@@ -1,0 +1,427 @@
+"""Lazy Dataset API: plan construction, optimizer rewrites, executor
+equivalence with the legacy eager flow, and streaming/batching semantics."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ingest as ing
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.frame import ColumnarFrame
+from repro.core.p3sapp import case_study_stages, run_conventional, run_p3sapp
+from repro.core.pipeline import Pipeline, compile_column_plans
+from repro.core.stages import ConvertToLower, RemoveShortWords, StopWordsRemover
+from repro.data.batching import TokenSpec, seq2seq_arrays, seq2seq_specs
+from repro.data.synthetic import write_corpus
+from repro.data.tokenizer import WordTokenizer
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    d = tmp_path_factory.mktemp("ds_corpus")
+    write_corpus(d, total_bytes=250_000, n_files=4, seed=21)
+    return d
+
+
+def _legacy_p3sapp(directories, fields=("title", "abstract")):
+    """The seed's hand-wired eager flow (ingest → pre_clean → Pipeline →
+    to_records → filter), kept here as the equivalence oracle."""
+    frame = ing.ingest(directories, fields)
+    frame = ing.pre_clean(frame, fields)
+    model = Pipeline(case_study_stages()).fit(frame)
+    frame = model.transform(frame, optimize=True)
+    records = frame.to_records()
+    return [r for r in records if all(r.get(f) for f in fields)]
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+
+
+def test_builders_are_lazy():
+    # nonexistent directory: building the whole chain must not touch disk
+    ds = (
+        Dataset.from_json_dirs(["/nonexistent/nowhere"])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+    )
+    kinds = [type(n) for n in ds.plan]
+    assert kinds == [P.SourceJsonDirs, P.DropNA, P.DropDuplicates, P.ApplyStages, P.DropNA]
+    # executing an empty source is fine too (no such files -> empty frame)
+    assert ds.collect().to_records() == []
+
+
+def test_schema_tracking_and_validation():
+    ds = Dataset.from_records([{"a": "x", "b": "y"}], ["a", "b"])
+    assert ds.schema == ("a", "b")
+    assert ds.apply(ConvertToLower("a", "a_low")).schema == ("a", "b", "a_low")
+    with pytest.raises(KeyError):
+        ds.dropna(["missing"])
+    with pytest.raises(KeyError):
+        ds.apply(ConvertToLower("missing"))
+    tok = WordTokenizer(["x"])
+    tokenized = ds.tokenize(tok, col="a", max_len=4)
+    with pytest.raises(ValueError):
+        tokenized.dropna()  # frame-level op after tokenize
+    with pytest.raises(ValueError):
+        ds.batch(4)  # batch before tokenize
+    with pytest.raises(ValueError):
+        tokenized.to_records()  # record terminals refuse tokenized plans too
+
+
+def test_explain_mentions_plan_nodes():
+    ds = Dataset.from_json_dirs(["/tmp/x"]).dropna().apply(ConvertToLower("title"))
+    text = ds.explain()
+    assert "SourceJsonDirs" in text and "DropNA" in text and "optimized plan" in text
+
+
+# ---------------------------------------------------------------------------
+# optimizer rewrites
+# ---------------------------------------------------------------------------
+
+
+def test_adjacent_apply_and_dropna_merge():
+    ds = (
+        Dataset.from_json_dirs(["/tmp/x"])
+        .apply(ConvertToLower("title"))
+        .apply(RemoveShortWords("title"))
+        .dropna(["title"])
+        .dropna(["abstract"])
+    )
+    opt = ds.optimized_plan()
+    applies = [n for n in opt if isinstance(n, P.ApplyStages)]
+    assert len(applies) == 1 and len(applies[0].stages) == 2
+    dropnas = [n for n in opt if isinstance(n, P.DropNA)]
+    assert len(dropnas) == 1 and set(dropnas[0].subset) == {"title", "abstract"}
+
+
+def test_dropna_pullback_past_disjoint_apply():
+    # dropna(title) after stages writing only `abstract` moves before them,
+    # so dropped rows are never flattened/cleaned — and results are identical.
+    records = [
+        {"title": "Keep Me", "abstract": "Some <b>Text</b> here"},
+        {"title": None, "abstract": "Dropped <i>Row</i>"},
+        {"title": "Also Kept", "abstract": "More (text) 42"},
+    ]
+    ds = (
+        Dataset.from_records(records, ["title", "abstract"])
+        .apply(ConvertToLower("abstract"))
+        .dropna(["title"])
+    )
+    opt = ds.optimized_plan()
+    assert isinstance(opt[1], P.DropNA) and isinstance(opt[2], P.ApplyStages)
+    # pulled-back plan produces the same records as the unoptimized order
+    plain = ds.collect(optimize=False).to_records()
+    fused = ds.collect(optimize=True).to_records()
+    assert plain == fused
+    assert all(r["title"] for r in fused) and len(fused) == 2
+
+
+def test_dropna_stays_after_apply_that_writes_it():
+    ds = (
+        Dataset.from_json_dirs(["/tmp/x"])
+        .apply(ConvertToLower("title"))
+        .dropna(["title"])
+    )
+    opt = ds.optimized_plan()
+    assert isinstance(opt[1], P.ApplyStages) and isinstance(opt[2], P.DropNA)
+
+
+def test_projection_pushdown_narrows_source():
+    ds = (
+        Dataset.from_json_dirs(["/tmp/x"], fields=("title", "abstract", "year"))
+        .dropna(["abstract"])
+        .apply(ConvertToLower("abstract"))
+        .tokenize(WordTokenizer(["x"]), col="abstract", max_len=8)
+    )
+    src = ds.optimized_plan()[0]
+    assert isinstance(src, P.SourceJsonDirs)
+    assert src.fields == ("abstract",)  # title/year are dead downstream
+
+
+# ---------------------------------------------------------------------------
+# column_plans fork/seal semantics
+# ---------------------------------------------------------------------------
+
+
+def test_column_plans_fork_and_seal_structure():
+    stages = [
+        ConvertToLower("t", "t_low"),  # fork: t -> t_low
+        RemoveShortWords("t", threshold=1),  # must NOT feed the fork above
+        StopWordsRemover("t_low"),  # merges into the forked plan
+    ]
+    plans = compile_column_plans(stages, optimize=False)
+    assert [(i, o) for i, o, _ in plans] == [
+        ("t", "t"),  # live plan for t, sealed by the fork
+        ("t", "t_low"),  # the fork reads the sealed state of t
+        ("t", "t"),  # later mutation of t starts a FRESH plan
+    ]
+    assert len(plans[1][2]) == len(ConvertToLower("t").flat_ops()) + len(
+        StopWordsRemover("t_low").flat_ops()
+    )  # the t_low continuation merged into the forked plan
+
+
+def test_fork_does_not_see_later_input_mutation():
+    frame = ColumnarFrame({"t": np.array(["AA bb", "C dd"], dtype=object)})
+    pipe = Pipeline([
+        ConvertToLower("t", "t_low"),
+        RemoveShortWords("t", threshold=1),  # mutates t AFTER the fork read it
+    ])
+    for optimize in (False, True):
+        out = pipe.fit(frame).transform(frame, optimize=optimize)
+        assert list(out["t_low"]) == ["aa bb", "c dd"]
+        assert list(out["t"]) == ["AA bb", "dd"]
+
+
+def test_fused_plans_are_shorter():
+    stages = case_study_stages()
+    plain = compile_column_plans(stages, optimize=False)
+    fused = compile_column_plans(stages, optimize=True)
+    assert sum(len(ops) for _, _, ops in fused) < sum(len(ops) for _, _, ops in plain)
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence (property-style over seeds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [3, 13])
+def test_collect_matches_legacy_run_p3sapp(tmp_path_factory, seed):
+    d = tmp_path_factory.mktemp(f"eq_{seed}")
+    write_corpus(d, total_bytes=120_000, n_files=3, seed=seed)
+    legacy = _legacy_p3sapp([d])
+    fields = ("title", "abstract")
+    ds = (
+        Dataset.from_json_dirs([d], fields)
+        .dropna(fields)
+        .drop_duplicates(fields)
+        .apply(*case_study_stages())
+        .dropna(fields)
+    )
+    assert ds.collect(optimize=True).to_records() == legacy
+    assert ds.to_records(optimize=False) == legacy
+    via_driver, timings = run_p3sapp([d], optimize=True)
+    assert via_driver == legacy
+    assert timings.cumulative > 0
+
+
+def test_streaming_matches_wholeframe(corpus):
+    tok_records, _ = run_p3sapp([corpus], optimize=True)
+    tok = WordTokenizer.fit((r["abstract"] for r in tok_records), vocab_size=256)
+
+    def chain():
+        return (
+            Dataset.from_json_dirs([corpus])
+            .dropna()
+            .drop_duplicates()
+            .apply(*case_study_stages())
+            .dropna()
+            .tokenize(tok, seq2seq_specs(32, 8))
+            .batch(16, shuffle=False, drop_remainder=False)
+        )
+
+    whole = list(chain().iter_batches())
+    streamed = list(chain().prefetch(2).iter_batches(workers=3))
+
+    def row_set(batches):
+        return sorted(
+            (b["encoder_tokens"][i].tobytes(), b["decoder_tokens"][i].tobytes())
+            for b in batches
+            for i in range(len(b["encoder_tokens"]))
+        )
+
+    assert sum(len(b["encoder_tokens"]) for b in streamed) == sum(
+        len(b["encoder_tokens"]) for b in whole
+    )
+    assert row_set(streamed) == row_set(whole)
+
+
+def test_streaming_rejects_partial_subset_dedup(corpus):
+    # partial-subset dedup survivors depend on shard arrival order; the
+    # streaming executor must refuse rather than return racy results
+    tok = WordTokenizer(["w"])
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .drop_duplicates(["title"])
+        .apply(*case_study_stages())
+        .tokenize(tok, seq2seq_specs(16, 4))
+        .batch(4, shuffle=False)
+        .prefetch(2)
+    )
+    with pytest.raises(ValueError, match="scheduling-dependent"):
+        next(ds.iter_batches())
+
+
+def test_tokenize_arrays_match_legacy_encoding(corpus):
+    records, _ = run_p3sapp([corpus], optimize=True)
+    tok = WordTokenizer.fit((r["abstract"] + " " + r["title"] for r in records), 512)
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+        .tokenize(tok, seq2seq_specs(48, 12))
+    )
+    arrs = ds.arrays(optimize=True)
+    legacy = seq2seq_arrays(records, tok, 48, 12)
+    np.testing.assert_array_equal(arrs["encoder_tokens"], legacy["encoder_tokens"])
+    np.testing.assert_array_equal(arrs["decoder_tokens"], legacy["decoder_tokens"])
+
+
+# ---------------------------------------------------------------------------
+# batching / split / device terminals
+# ---------------------------------------------------------------------------
+
+
+def test_batch_shapes_pad_and_remainder():
+    records = [{"a": f"word{i}"} for i in range(10)]
+    tok = WordTokenizer([f"word{i}" for i in range(10)])
+    base = Dataset.from_records(records, ["a"]).tokenize(tok, col="a", max_len=4)
+
+    dropped = list(base.batch(4, shuffle=False).iter_batches())
+    assert [len(b["a_tokens"]) for b in dropped] == [4, 4]
+
+    kept = list(base.batch(4, shuffle=False, drop_remainder=False).iter_batches())
+    assert [len(b["a_tokens"]) for b in kept] == [4, 4, 2]
+
+    padded = list(base.batch(4, shuffle=False, pad_to=4).iter_batches())
+    assert [len(b["a_tokens"]) for b in padded] == [4, 4, 4]
+    assert (padded[-1]["a_tokens"][2:] == 0).all()  # PAD rows
+
+
+def test_epochs_reshuffle():
+    records = [{"a": f"word{i}"} for i in range(8)]
+    tok = WordTokenizer([f"word{i}" for i in range(8)])
+    ds = Dataset.from_records(records, ["a"]).tokenize(tok, col="a", max_len=2).batch(
+        4, shuffle=True, seed=0
+    )
+    batches = list(ds.iter_batches(epochs=2))
+    assert len(batches) == 4
+    e0 = np.concatenate([b["a_tokens"] for b in batches[:2]])
+    e1 = np.concatenate([b["a_tokens"] for b in batches[2:]])
+    assert sorted(map(tuple, e0)) == sorted(map(tuple, e1))  # same rows
+    assert not (e0 == e1).all()  # different order across epochs
+
+
+def test_split_partitions_rows(corpus):
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+    )
+    all_records = ds.to_records()
+    train, val = ds.split(val_fraction=0.2, seed=1)
+    tr, va = train.to_records(), val.to_records()
+    assert len(tr) + len(va) == len(all_records)
+    key = lambda r: (r["title"], r["abstract"])
+    assert sorted(map(key, tr + va)) == sorted(map(key, all_records))
+
+
+def test_device_batches_smoke_and_close():
+    records = [{"a": f"word{i}"} for i in range(32)]
+    tok = WordTokenizer([f"word{i}" for i in range(32)])
+    ds = Dataset.from_records(records, ["a"]).tokenize(tok, col="a", max_len=2).batch(8)
+    loader = ds.device_batches(epochs=None, prefetch=2)  # endless stream
+    taken = []
+    for b in loader:
+        taken.append(b)
+        if len(taken) >= 6:
+            break
+    loader.close()  # must not hang on the blocked fill thread
+    assert all(b["a_tokens"].shape == (8, 2) for b in taken)
+
+
+def test_endless_epochs_terminate_when_empty():
+    # regression: epochs=None over a dataset too small to fill one batch
+    # must terminate instead of busy-spinning forever
+    records = [{"a": "word0"}, {"a": "word1"}]
+    tok = WordTokenizer(["word0", "word1"])
+    ds = Dataset.from_records(records, ["a"]).tokenize(tok, col="a", max_len=2).batch(
+        8, shuffle=False  # drop_remainder=True -> zero batches per epoch
+    )
+    assert list(ds.iter_batches(epochs=None)) == []
+
+
+def test_async_loader_close_with_prefetch_one():
+    # regression: the fill thread's sentinel put must not deadlock when
+    # close() races a full 1-slot queue
+    import threading
+    import time
+
+    from repro.core.async_loader import AsyncLoader
+
+    src = ({"x": np.full((2,), i)} for i in range(100_000))
+    loader = AsyncLoader(src, prefetch=1)
+    next(iter(loader))
+    t0 = time.time()
+    loader.close()
+    assert time.time() - t0 < 2.0
+
+
+def test_streaming_abandon_stops_shard_pool(corpus):
+    # regression: breaking out of a streaming loader must stop the ShardPool
+    # readers instead of preprocessing the rest of the corpus
+    import threading
+    import time
+
+    tok = WordTokenizer(["w"])
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .tokenize(tok, seq2seq_specs(16, 4))
+        .batch(4, shuffle=False)
+        .prefetch(2)
+    )
+    before = threading.active_count()
+    loader = ds.device_batches(epochs=None, workers=3)
+    it = iter(loader)
+    next(it)
+    loader.close()
+    time.sleep(0.5)
+    assert threading.active_count() <= before + 1
+
+
+def test_materialization_is_memoized(corpus, monkeypatch):
+    ds = Dataset.from_json_dirs([corpus]).dropna().drop_duplicates()
+    first = ds.collect()
+    calls = []
+    monkeypatch.setattr(
+        P, "execute_frame_plan", lambda *a, **k: calls.append(1) or (_ for _ in ()).throw(
+            AssertionError("re-executed a memoized plan")
+        )
+    )
+    assert ds.collect() is first  # cache hit, no re-execution
+    # a derived split resumes from the memoized frame instead of re-ingesting
+    train, val = ds.split(0.25, seed=0)
+    assert len(train.collect()) + len(val.collect()) == len(first)
+
+
+# ---------------------------------------------------------------------------
+# NUL normalization (CA/P3SAPP equivalence regression)
+# ---------------------------------------------------------------------------
+
+
+def test_nul_bytes_normalized_identically_in_both_paths(tmp_path):
+    shard = tmp_path / "shard_0000.jsonl"
+    rows = [
+        {"title": "Null\x00Byte Title", "abstract": "Some\x00 <b>Marked</b> abstract text"},
+        {"title": "Plain Title", "abstract": "Plain abstract text with words"},
+    ]
+    with open(shard, "w", encoding="utf-8") as fh:
+        for r in rows:
+            fh.write(json.dumps(r) + "\n")
+    pa, _ = run_p3sapp([tmp_path])
+    ca, _ = run_conventional([tmp_path])
+    assert pa == ca  # byte-identical records, not just set overlap
+    assert len(pa) == 2
+    assert "null byte title" == pa[0]["title"]
