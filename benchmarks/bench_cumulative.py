@@ -1,6 +1,11 @@
 """Paper Table 4 / Figs. 9-10: cumulative (ingestion+preprocessing) time
 with trend-line slopes. P3SAPP runs as the lazy Dataset plan
-(paper-faithful executor, ``optimize=False``)."""
+(paper-faithful executor, ``optimize=False``).
+
+``--workers N`` adds the shard-executor axis to the cumulative table: the
+same chain streamed per shard through N workers (processes when N > 1),
+optionally against the plan-fingerprint shard cache (``--cache``) — the
+scaling curve the CA-vs-P3SAPP comparison predicts."""
 
 from __future__ import annotations
 
@@ -11,7 +16,12 @@ from repro.core.p3sapp import p3sapp_dataset, run_conventional
 from .common import dataset_dirs, emit
 
 
-def run(quick: bool = False) -> list[dict]:
+def run(
+    quick: bool = False,
+    workers: int | None = None,
+    cache: bool = False,
+    executor: str | None = None,
+) -> list[dict]:
     rows = []
     xs, ca_ys, pa_ys = [], [], []
     for ds_id, d, gb in dataset_dirs(quick):
@@ -20,7 +30,7 @@ def run(quick: bool = False) -> list[dict]:
         xs.append(gb)
         ca_ys.append(tc.cumulative)
         pa_ys.append(tp.cumulative)
-        rows.append({
+        row = {
             "name": "table4_cumulative",
             "dataset_id": ds_id,
             "paper_gb": gb,
@@ -28,7 +38,14 @@ def run(quick: bool = False) -> list[dict]:
             "p3sapp_s": round(tp.cumulative, 4),
             "reduction_pct": round(100 * (1 - tp.cumulative / tc.cumulative), 3),
             "us_per_call": round(tp.cumulative * 1e6, 1),
-        })
+        }
+        rows.append(row)
+    if workers is not None:
+        from .bench_preprocessing import run_scaling
+
+        for srow in run_scaling(quick, workers, cache, executor):
+            srow["name"] = "table4_cumulative_workers"
+            rows.append(srow)
     if len(xs) >= 2:
         ca_slope = float(np.polyfit(xs, ca_ys, 1)[0])
         pa_slope = float(np.polyfit(xs, pa_ys, 1)[0])
@@ -44,9 +61,24 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit("table4_cumulative", run(quick))
+def main(
+    quick: bool = False,
+    workers: int | None = None,
+    cache: bool = False,
+    executor: str | None = None,
+) -> None:
+    emit("table4_cumulative", run(quick, workers, cache, executor))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="add the shard-executor axis with N workers")
+    ap.add_argument("--cache", action="store_true",
+                    help="enable the plan-fingerprint shard cache")
+    ap.add_argument("--executor", choices=["thread", "process"], default=None)
+    args = ap.parse_args()
+    main(args.quick, args.workers, args.cache, args.executor)

@@ -3,13 +3,87 @@ CA vs P3SAPP, plus the beyond-paper planned/fused Dataset executor.
 
 Both P3SAPP rows run through the lazy ``Dataset`` plan: ``optimize=False``
 is the paper-faithful executor (no plan rewrites, per-stage ops), while
-``optimize=True`` is the planner's merged + fused path."""
+``optimize=True`` is the planner's merged + fused path.
+
+``--workers N`` switches to the shard-executor scaling axis: the same
+cleaning program runs per shard in the selected executor (worker processes
+when N > 1) and the row reports end-to-end wall-clock. ``--cache`` enables
+the plan-fingerprint shard cache; a second identical run then reports its
+hit rate (the Spark ``persist()`` analogue). The cache persists across
+invocations by design — compare ``--workers`` values *without* ``--cache``
+(equal cold state), and use ``--cache`` for the cold/warm protocol; each
+row's ``cache_hit_pct`` shows which state it measured."""
 
 from __future__ import annotations
 
+import time
+
+from repro.core import executor as EX
+from repro.core import ingest as ing
+from repro.core import plan as P
 from repro.core.p3sapp import p3sapp_dataset, run_conventional
+from repro.core.stages import abstract_stages, title_stages
 
 from .common import dataset_dirs, emit
+
+CACHE_DIR = EX.default_cache_dir() / "bench_preprocessing"
+
+
+def run_scaling(
+    quick: bool = False,
+    workers: int = 1,
+    cache: bool = False,
+    executor: str | None = None,
+) -> list[dict]:
+    from repro.core.dataset import Dataset
+
+    rows = []
+    for ds_id, d, gb in dataset_dirs(quick):
+        # The canonical cleaning chain, dedup-free so every executor (and
+        # the cache) applies; dedup is cross-shard state and thread-only.
+        ds = (
+            Dataset.from_json_dirs([d])
+            .dropna()
+            .apply(*(abstract_stages() + title_stages()))
+            .dropna()
+        )
+        frame_nodes, _ = P.split_plan(ds.plan)
+        program = EX.compile_shard_program(
+            P.optimize_plan(frame_nodes, ds.schema), optimize=True
+        )
+        shards = ing.list_shards([d])
+        t0 = time.perf_counter()
+        ex = EX.make_executor(
+            shards,
+            program,
+            workers=workers,
+            cache_dir=CACHE_DIR if cache else None,
+            executor=executor,
+        )
+        n_rows = 0
+        try:
+            for res in ex:
+                n_rows += len(res.frame)
+        finally:
+            ex.stop()
+        wall = time.perf_counter() - t0
+        lookups = ex.cache_hits + ex.cache_misses
+        rows.append({
+            "name": "executor_scaling",
+            "dataset_id": ds_id,
+            "paper_gb": gb,
+            "workers": workers,
+            "executor": ex.name,
+            "cache": cache,
+            "wall_s": round(wall, 4),
+            "rows": n_rows,
+            "shards": len(shards),
+            "cache_hits": ex.cache_hits,
+            "cache_misses": ex.cache_misses,
+            "cache_hit_pct": round(100 * ex.cache_hits / lookups, 2) if lookups else 0.0,
+            "us_per_call": round(wall * 1e6, 1),
+        })
+    return rows
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -38,9 +112,27 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False) -> None:
-    emit("table3_preprocessing", run(quick))
+def main(
+    quick: bool = False,
+    workers: int | None = None,
+    cache: bool = False,
+    executor: str | None = None,
+) -> None:
+    if workers is not None:
+        emit("executor_scaling", run_scaling(quick, workers, cache, executor))
+    else:
+        emit("table3_preprocessing", run(quick))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shard-executor scaling axis with N workers")
+    ap.add_argument("--cache", action="store_true",
+                    help="enable the plan-fingerprint shard cache")
+    ap.add_argument("--executor", choices=["thread", "process"], default=None)
+    args = ap.parse_args()
+    main(args.quick, args.workers, args.cache, args.executor)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import queue
 import threading
 from pathlib import Path
-from typing import Callable, Iterator, Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import numpy as np
@@ -46,18 +46,26 @@ def _drain(q: "queue.Queue") -> None:
 
 
 class ShardPool:
-    """Work-stealing shard reader: files → preprocessed record batches."""
+    """Work-stealing worker pool over an ordered list of work items.
+
+    The canonical use is shard files → preprocessed record batches, but any
+    work item type goes: the shard executors
+    (:mod:`repro.core.executor`) feed it paths and consume
+    :class:`~repro.core.executor.ShardResult` objects. String/path items
+    are normalized to :class:`~pathlib.Path`; everything else passes
+    through untouched.
+    """
 
     def __init__(
         self,
-        shards: Sequence[str | Path],
-        process_shard: Callable[[Path], list],
+        shards: Sequence,
+        process_shard: Callable[[Any], Any],
         n_readers: int = 2,
         max_queue: int = 8,
     ):
         self._shards: "queue.Queue[object]" = queue.Queue()
         for s in shards:
-            self._shards.put(Path(s))
+            self._shards.put(Path(s) if isinstance(s, (str, Path)) else s)
         self._out: "queue.Queue[object]" = queue.Queue(maxsize=max_queue)
         self._process = process_shard
         self._errors: list[BaseException] = []
@@ -129,11 +137,14 @@ class AsyncLoader:
             except BaseException as e:
                 self._err.append(e)
             finally:
-                # closing the source iterator runs its finalizers (e.g. a
-                # streaming generator shutting down its ShardPool)
-                close = getattr(batches, "close", None)
-                if close is not None:
-                    close()
+                # Closing the source runs its finalizers (a streaming
+                # generator shutting down its shard executor); raw executors
+                # fed in directly expose stop() instead of close().
+                finalize = getattr(batches, "close", None) or getattr(
+                    batches, "stop", None
+                )
+                if finalize is not None:
+                    finalize()
                 _put_cancellable(self._q, _SENTINEL, self._closed)
 
         self._thread = threading.Thread(target=fill, daemon=True)

@@ -258,6 +258,10 @@ class WordSet:
             )
         return hit
 
+    def signature(self) -> bytes:
+        """Stable content signature (for plan fingerprinting)."""
+        return b"wordset:" + self.k1.tobytes() + self.k2.tobytes() + self.ln.tobytes()
+
     def _compute_max_dup(self) -> int:
         if self.k1.size < 2:
             return 1
@@ -367,6 +371,111 @@ def apply_ops(buf: np.ndarray, ops: Sequence[Op]) -> np.ndarray:
     for op in ops:
         buf = apply_op(buf, op)
     return buf
+
+
+class UnfingerprintableOpError(ValueError):
+    """The op's behavior cannot be captured in a stable signature (e.g. a
+    lambda predicate): callers must treat its outputs as uncacheable
+    rather than risk serving stale results under a colliding key."""
+
+
+def _pred_signature(pred) -> bytes:
+    """Stable byte signature of a word predicate (module-level function or a
+    ``functools.partial`` tree over them) — the cache key must change when any
+    parameter (threshold, stopword list, …) changes."""
+    import functools
+
+    if isinstance(pred, functools.partial):
+        parts = [b"partial:", _pred_signature(pred.func)]
+        for a in pred.args:
+            parts.append(_value_signature(a))
+        for k in sorted(pred.keywords):
+            parts.append(k.encode() + b"=" + _value_signature(pred.keywords[k]))
+        return b"|".join(parts)
+    qualname = getattr(pred, "__qualname__", None)
+    if qualname is None or "<lambda>" in qualname or "<locals>" in qualname:
+        # Lambdas / closures all share a qualname; two different ones must
+        # never produce the same fingerprint.
+        raise UnfingerprintableOpError(
+            f"cannot fingerprint predicate {pred!r}; use a module-level "
+            "function (optionally via functools.partial) to make it cacheable"
+        )
+    module = getattr(pred, "__module__", "") or ""
+    parts = [f"{module}.{qualname}".encode()]
+    code = getattr(pred, "__code__", None)
+    if code is not None:
+        # Include the bytecode so *editing the function body* invalidates
+        # cached results, not just renaming it.
+        parts.append(code.co_code)
+        parts.append(
+            repr([c for c in code.co_consts if not hasattr(c, "co_code")]).encode()
+        )
+    return b"\x1f".join(parts)
+
+
+def _value_signature(value) -> bytes:
+    """Deterministic, collision-averse signature of a predicate parameter.
+
+    repr() is not good enough here: set iteration order varies per process
+    (hash randomization → a cache that never hits across runs) and custom
+    reprs may omit the parameters that matter (→ stale hits). Anything we
+    cannot serialize deterministically raises, poisoning the column into
+    the uncacheable-but-correct path."""
+    if isinstance(value, WordSet):
+        return value.signature()
+    if callable(value):
+        return _pred_signature(value)
+    if isinstance(value, np.ndarray):
+        return b"nd:" + value.tobytes()
+    if value is None or isinstance(value, (bool, int, float, str, bytes)):
+        return f"{type(value).__name__}:{value!r}".encode()
+    if isinstance(value, (tuple, list)):
+        return b"seq:" + b",".join(_value_signature(v) for v in value)
+    if isinstance(value, (set, frozenset)):
+        return b"set:" + b",".join(sorted(_value_signature(v) for v in value))
+    if isinstance(value, dict):
+        return b"map:" + b",".join(
+            _value_signature(k) + b"=" + _value_signature(v)
+            for k, v in sorted(value.items(), key=lambda kv: repr(kv[0]))
+        )
+    raise UnfingerprintableOpError(
+        f"cannot fingerprint predicate parameter {value!r} "
+        f"({type(value).__name__}); pass plain data or a WordSet"
+    )
+
+
+def op_signature(op: Op) -> bytes:
+    """Stable byte signature of one op — the unit of plan fingerprinting."""
+    if op.kind == "lut":
+        return b"lut:" + op.lut.tobytes()
+    if op.kind == "span":
+        return b"span:%d,%d" % op.span
+    if op.kind == "replace":
+        # Length-prefix each side: joining with separators would let two
+        # different pattern lists collide into one signature (e.g. a
+        # pattern containing the separator), which the cache must never do.
+        parts = [b"replace:"]
+        for p, r in op.patterns:
+            parts.append(len(p).to_bytes(4, "little") + p)
+            parts.append(len(r).to_bytes(4, "little") + r)
+        return b"".join(parts)
+    if op.kind == "collapse":
+        return b"collapse"
+    if op.kind == "wordpred":
+        return b"wordpred:" + _pred_signature(op.pred)
+    raise ValueError(f"unknown op {op.kind}")
+
+
+def ops_fingerprint(ops: Sequence[Op]) -> str:
+    """Hex fingerprint of an op chain (order-sensitive, parameter-exact)."""
+    import hashlib
+
+    h = hashlib.blake2b(digest_size=16)
+    for op in ops:
+        sig = op_signature(op)
+        h.update(len(sig).to_bytes(8, "little"))
+        h.update(sig)
+    return h.hexdigest()
 
 
 def fuse_ops(ops: Sequence[Op]) -> list[Op]:

@@ -27,10 +27,17 @@ Terminals:
 
 Whole-frame results are memoized on the frame-level prefix, so fitting a
 tokenizer and then training off the same chain ingests/cleans only once.
+
+Execution options are builder verbs too: ``.workers(n)`` sets the default
+parallelism for every terminal (streaming terminals then run shards in
+worker *processes* when ``n > 1`` — see :mod:`repro.core.executor`), and
+``.cache()`` turns on the on-disk plan-fingerprint shard cache so re-runs
+of an unchanged plan skip cleaning entirely.
 """
 
 from __future__ import annotations
 
+import os
 import time
 from pathlib import Path
 from typing import Any, Iterator, Sequence
@@ -52,10 +59,12 @@ class Dataset:
         nodes: Sequence[P.PlanNode],
         schema: Sequence[str],
         parent: "Dataset | None" = None,
+        options: dict | None = None,
     ):
         self._nodes = tuple(nodes)
         self.schema = tuple(schema)
         self._parent = parent
+        self._options = dict(options or {})
         self._frame_cache: dict[tuple, tuple[ColumnarFrame, P.StageTimings]] = {}
 
     # -- construction ------------------------------------------------------
@@ -83,7 +92,7 @@ class Dataset:
                 f"{type(node).__name__} is frame-level and must come before "
                 "tokenize/batch/prefetch"
             )
-        return Dataset(self._nodes + (node,), schema, parent=self)
+        return Dataset(self._nodes + (node,), schema, parent=self, options=self._options)
 
     def _resolve_subset(self, subset: Sequence[str] | None) -> tuple[str, ...]:
         cols = tuple(subset) if subset is not None else self.schema
@@ -160,6 +169,52 @@ class Dataset:
         over a work-stealing pool and feeds AsyncLoader with this depth."""
         return self._derive(P.Prefetch(prefetch, sharding), self.schema)
 
+    # -- execution options (lazy; no plan nodes) ---------------------------
+    def _with_options(self, **options: Any) -> "Dataset":
+        # parent=self: the new handle shares this dataset's position in the
+        # memoization chain, so adding options after a terminal still
+        # resumes from the already-materialized frame (empty suffix).
+        return Dataset(
+            self._nodes, self.schema, parent=self,
+            options={**self._options, **options},
+        )
+
+    def workers(self, n: int, *, executor: str | None = None) -> "Dataset":
+        """Default worker count for every terminal of this chain (and, for
+        streaming terminals, which physical executor runs the shards:
+        ``"thread"``/``"process"``; default picks processes when ``n > 1``)."""
+        if n < 1:
+            raise ValueError(f"workers must be >= 1, got {n}")
+        opts: dict[str, Any] = {"workers": int(n)}
+        if executor is not None:
+            opts["executor"] = executor
+        return self._with_options(**opts)
+
+    def cache(self, directory: str | Path | bool = True) -> "Dataset":
+        """Enable the on-disk plan-fingerprint shard cache for streaming
+        terminals (the Spark ``persist()`` analogue). ``True`` uses
+        ``REPRO_CACHE_DIR`` or the system temp dir; a path pins the cache
+        root. ``False`` disables a previously enabled cache."""
+        from .executor import default_cache_dir
+
+        if directory is False:
+            return self._with_options(cache_dir=None)
+        root = default_cache_dir() if directory is True else Path(directory)
+        return self._with_options(cache_dir=root)
+
+    def _resolve_workers(self, explicit: int | None, default: int = 1) -> int:
+        if explicit is not None:
+            return max(int(explicit), 1)
+        if "workers" in self._options:
+            return self._options["workers"]
+        env = os.environ.get("REPRO_WORKERS")
+        if env:
+            try:
+                return max(int(env), 1)
+            except ValueError:
+                pass
+        return default
+
     # -- plan inspection ---------------------------------------------------
     @property
     def plan(self) -> tuple[P.PlanNode, ...]:
@@ -195,11 +250,27 @@ class Dataset:
         return self._frame_schema()
 
     def _materialize(
-        self, workers: int, optimize: bool
+        self, workers: int, optimize: bool, exact: bool = False
     ) -> tuple[ColumnarFrame, P.StageTimings]:
         owner = self._frame_prefix_dataset()
         key = (workers, optimize)
-        hit = owner._frame_cache.get(key)
+
+        def lookup(ds: "Dataset"):
+            # The frame is worker-count-invariant (only timings differ), so
+            # an entry with the same optimize flag is a valid reuse —
+            # .workers(n) after a terminal must not force a re-clean. But a
+            # caller who passed workers= explicitly (``exact``) is often
+            # sweeping worker counts for timings, so only the exact key
+            # counts there.
+            hit = ds._frame_cache.get(key)
+            if hit is None and not exact:
+                hit = next(
+                    (v for (_, o), v in ds._frame_cache.items() if o == optimize),
+                    None,
+                )
+            return hit
+
+        hit = lookup(owner)
         if hit is not None:
             return hit
         # Resume from the deepest memoized ancestor prefix, if any: a chain
@@ -208,7 +279,7 @@ class Dataset:
         base_len = 0
         ds = owner._parent
         while ds is not None:
-            cached = ds._frame_cache.get(key)
+            cached = lookup(ds)
             if cached is not None:
                 base, base_len = cached, len(ds._nodes)
                 break
@@ -241,29 +312,40 @@ class Dataset:
     def _streaming(self) -> bool:
         if not any(isinstance(n, P.Prefetch) for n in self._nodes):
             return False
+        # Already materialized (possibly on an options-hop ancestor sharing
+        # the same frame prefix) — reuse the frame, don't re-read shards.
         owner = self._frame_prefix_dataset()
-        if owner._frame_cache:  # already materialized — reuse, don't re-read
-            return False
+        ds: Dataset | None = owner
+        while ds is not None and len(ds._nodes) == len(owner._nodes):
+            if ds._frame_cache:
+                return False
+            ds = ds._parent
         return isinstance(self._nodes[0], P.SourceJsonDirs) and not any(
             isinstance(n, P.Split) for n in self._nodes
         )
 
     # -- terminal actions --------------------------------------------------
-    def collect(self, *, workers: int = 1, optimize: bool = True) -> ColumnarFrame:
+    def collect(
+        self, *, workers: int | None = None, optimize: bool = True
+    ) -> ColumnarFrame:
         """Materialize the frame (plan must be frame-level only)."""
         if self._array_nodes():
             raise ValueError("collect() on a tokenized plan; use arrays()/iter_batches()")
-        return self._materialize(workers, optimize)[0]
+        return self._materialize(
+            self._resolve_workers(workers), optimize, exact=workers is not None
+        )[0]
 
     def execute(
-        self, *, workers: int = 1, optimize: bool = True
+        self, *, workers: int | None = None, optimize: bool = True
     ) -> tuple[list[dict], P.StageTimings]:
         """(records, StageTimings) — the legacy ``run_p3sapp`` contract."""
         if self._array_nodes():
             raise ValueError(
                 "execute()/to_records() on a tokenized plan; use arrays()/iter_batches()"
             )
-        frame, t = self._materialize(workers, optimize)
+        frame, t = self._materialize(
+            self._resolve_workers(workers), optimize, exact=workers is not None
+        )
         t = P.StageTimings(**{k: getattr(t, k) for k in
                               ("ingestion", "pre_cleaning", "cleaning", "post_cleaning")})
         t0 = time.perf_counter()
@@ -271,33 +353,50 @@ class Dataset:
         t.post_cleaning += time.perf_counter() - t0
         return records, t
 
-    def to_records(self, *, workers: int = 1, optimize: bool = True) -> list[dict]:
+    def to_records(
+        self, *, workers: int | None = None, optimize: bool = True
+    ) -> list[dict]:
         return self.execute(workers=workers, optimize=optimize)[0]
 
-    def arrays(self, *, workers: int = 1, optimize: bool = True) -> dict[str, np.ndarray]:
+    def arrays(
+        self, *, workers: int | None = None, optimize: bool = True
+    ) -> dict[str, np.ndarray]:
         """Materialize tokenized model-input arrays whole-frame."""
-        frame, _ = self._materialize(workers, optimize)
+        frame, _ = self._materialize(
+            self._resolve_workers(workers), optimize, exact=workers is not None
+        )
         return P.execute_array_nodes(frame, self._array_nodes())
 
     def iter_batches(
         self,
         *,
-        workers: int = 1,
+        workers: int | None = None,
         optimize: bool = True,
         epochs: int | None = 1,
         shuffle_buffer: int | None = None,
+        executor: str | None = None,
+        stats: dict | None = None,
     ) -> Iterator[dict[str, np.ndarray]]:
         """Batch iterator; streams per shard when ``.prefetch()`` is declared
-        and the source has not already been materialized."""
+        and the source has not already been materialized.
+
+        Worker count resolves explicit ``workers`` > ``.workers(n)`` >
+        ``REPRO_WORKERS`` > default (2 for streaming, 1 whole-frame);
+        likewise ``executor`` falls back to ``.workers(executor=...)`` then
+        ``REPRO_EXECUTOR``. ``stats`` (a dict) receives executor/cache
+        counters after each streamed epoch."""
         batch = self._batch_node()
         if self._streaming():
             yield from P.stream_batches(
                 self._nodes,
-                workers=max(workers, 2),
+                workers=self._resolve_workers(workers, default=2),
                 optimize=optimize,
                 epochs=epochs,
                 shuffle_buffer=shuffle_buffer,
                 final_schema=self._needed_columns(),
+                executor=executor or self._options.get("executor"),
+                cache_dir=self._options.get("cache_dir"),
+                stats=stats,
             )
             return
         arrays = self.arrays(workers=workers, optimize=optimize)
@@ -321,16 +420,19 @@ class Dataset:
     def device_batches(
         self,
         *,
-        workers: int = 1,
+        workers: int | None = None,
         optimize: bool = True,
         epochs: int | None = 1,
         prefetch: int | None = None,
         sharding: Any = None,
+        executor: str | None = None,
     ) -> AsyncLoader:
         """Terminal: batches prefetched onto device via AsyncLoader, so host
         preprocessing overlaps device compute end-to-end."""
         node = next((n for n in self._nodes if isinstance(n, P.Prefetch)), None)
         depth = prefetch if prefetch is not None else (node.prefetch if node else 2)
         shard = sharding if sharding is not None else (node.sharding if node else None)
-        it = self.iter_batches(workers=workers, optimize=optimize, epochs=epochs)
+        it = self.iter_batches(
+            workers=workers, optimize=optimize, epochs=epochs, executor=executor
+        )
         return AsyncLoader(it, prefetch=depth, sharding=shard)

@@ -1,0 +1,984 @@
+"""Shard executors: process-parallel cleaning + plan-fingerprint caching.
+
+The paper's cost argument (§3, eq. 7) assumes two Spark properties our
+in-thread streaming path lacked: *true multi-worker execution* of the
+cleaning stages and *reuse of already-computed results* (``persist()``).
+This module supplies both behind the planner:
+
+* :class:`ShardProgram` — the per-shard physical program compiled from the
+  frame-level plan (parse → select/dropna[/dedup] → per-column op chains).
+  Programs are picklable: ops are plain descriptors
+  (:mod:`repro.core.bytesops`), so the same program runs in a thread or in
+  a worker process.
+* :class:`ThreadShardExecutor` — the existing in-thread path: a
+  work-stealing :class:`~repro.core.async_loader.ShardPool` of reader
+  threads, each running the full program per shard. Supports cross-shard
+  ``drop_duplicates`` (shared keep-first state).
+* :class:`ProcessShardExecutor` — worker *processes* with a shared task
+  queue (self-scheduling == work stealing). Raw shard bytes travel to
+  workers as shared-memory uint8 buffers; cleaned flat column buffers plus
+  their row offsets travel back the same way, so no large pickles cross
+  the pipe. Falls back to the thread executor when ``workers <= 1``, when
+  the platform lacks POSIX shared memory, or when the program needs
+  cross-shard state (``drop_duplicates``).
+* :class:`ShardCache` — the ``persist()`` analogue: an on-disk cache of
+  cleaned column buffers keyed by ``(shard bytes digest, column lineage
+  fingerprint)``. Re-running an unchanged plan skips cleaning entirely;
+  changing one column's ops recomputes only that column (other columns
+  keep hitting). Corrupted entries are treated as misses, never errors.
+
+Executor selection honors ``REPRO_EXECUTOR`` (``thread`` | ``process``)
+and the cache root honors ``REPRO_CACHE_DIR``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import multiprocessing as mp
+import os
+import tempfile
+import threading
+import time
+import traceback
+import dataclasses
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Iterator, Sequence
+
+import numpy as np
+
+from . import bytesops as B
+from . import ingest as ing
+from .async_loader import ShardPool
+from .frame import ColumnarFrame
+from .pipeline import ColumnPlan
+
+# ---------------------------------------------------------------------------
+# Shard program: the picklable per-shard physical plan
+# ---------------------------------------------------------------------------
+
+# Step kinds: ("select", cols) | ("dropna", cols) | ("dedup", cols)
+#           | ("clean", ((in_col, out_col, (op, ...)), ...))
+Step = tuple[str, Any]
+
+
+@dataclass(frozen=True)
+class ShardProgram:
+    """Per-shard physical program: parse ``fields``, run ``steps``, emit
+    ``output_columns`` (empty tuple = every live column)."""
+
+    fields: tuple[str, ...]
+    steps: tuple[Step, ...]
+    output_columns: tuple[str, ...] = ()
+
+    @property
+    def has_dedup(self) -> bool:
+        return any(kind == "dedup" for kind, _ in self.steps)
+
+
+class UnsupportedPlanError(ValueError):
+    """The plan cannot be compiled to a per-shard program."""
+
+
+def compile_shard_program(
+    frame_nodes: Sequence[Any],
+    *,
+    optimize: bool = True,
+    output_columns: Sequence[str] = (),
+) -> ShardProgram:
+    """Compile an (optimized) frame-level plan into a :class:`ShardProgram`.
+
+    ``frame_nodes[0]`` must be a ``SourceJsonDirs``; ``Split`` is whole-frame
+    only and rejected here.
+    """
+    from . import plan as P  # local import: plan.py imports this module
+    from .pipeline import compile_column_plans
+
+    src = frame_nodes[0]
+    if not isinstance(src, P.SourceJsonDirs):
+        raise UnsupportedPlanError("shard programs require a SourceJsonDirs source")
+    steps: list[Step] = []
+    for node in frame_nodes[1:]:
+        if isinstance(node, P.Select):
+            steps.append(("select", tuple(node.fields)))
+        elif isinstance(node, P.DropNA):
+            steps.append(("dropna", tuple(node.subset)))
+        elif isinstance(node, P.DropDuplicates):
+            steps.append(("dedup", tuple(node.subset)))
+        elif isinstance(node, P.ApplyStages):
+            plans = compile_column_plans(node.stages, optimize)
+            steps.append(("clean", tuple((i, o, tuple(ops)) for i, o, ops in plans)))
+        else:
+            raise UnsupportedPlanError(f"not shard-executable: {node.describe()}")
+    return ShardProgram(tuple(src.fields), tuple(steps), tuple(output_columns))
+
+
+# ---------------------------------------------------------------------------
+# Column lineage fingerprints (the plan half of the cache key)
+# ---------------------------------------------------------------------------
+
+
+def _lineage_fingerprints(
+    program: ShardProgram,
+) -> tuple[dict[int, dict[str, str]], dict[str, str]] | None:
+    """Per-clean-step, per-output-column lineage fingerprints.
+
+    A column's fingerprint at a clean step covers, in order, every earlier
+    step that can change that step's output buffer for a given shard: the
+    op chains along its own lineage and every row filter (``dropna``) —
+    including, transitively, the lineages of the filter's subset columns,
+    since *their* values decide which rows survive. Keys are step indices
+    into ``program.steps``: a column written by two clean steps gets a
+    *different* fingerprint at each, so the steps never alias one cache
+    entry. ``{}``-valued / missing columns are uncacheable (e.g. a
+    predicate that cannot be fingerprinted, such as a lambda). Returns
+    None when the whole program is uncacheable: ``dedup`` holds
+    cross-shard state, so a shard's output is not a pure function of
+    (shard bytes, program).
+    """
+    if program.has_dedup:
+        return None
+
+    def h(sig: bytes) -> bytes:
+        return hashlib.blake2b(sig, digest_size=16).digest()
+
+    # None in ``lineage`` poisons a column: its value depends on something
+    # we cannot fingerprint, so nothing derived from it may cache.
+    lineage: dict[str, bytes | None] = {
+        f: b"src:" + f.encode() for f in program.fields
+    }
+    per_step: dict[int, dict[str, str]] = {}
+    for step_idx, (kind, arg) in enumerate(program.steps):
+        if kind == "select":
+            lineage = {c: lineage[c] for c in arg if c in lineage}
+        elif kind == "dropna":
+            subset = [lineage.get(c) for c in arg]
+            if any(sig is None for sig in subset):
+                # Unfingerprintable column decides the row set → nothing
+                # downstream is a pure function of fingerprintable state.
+                lineage = {c: None for c in lineage}
+                continue
+            token = b"dropna:" + b",".join(
+                c.encode() + b"=" + lineage.get(c, b"?") for c in arg
+            )
+            lineage = {
+                c: h(sig + b"|" + token) if sig is not None else None
+                for c, sig in lineage.items()
+            }
+        elif kind == "clean":
+            fps: dict[str, str] = {}
+            for in_col, out_col, ops in arg:
+                base = lineage.get(in_col, b"src:" + in_col.encode())
+                if base is None:
+                    lineage[out_col] = None
+                    continue
+                try:
+                    ops_fp = B.ops_fingerprint(ops).encode()
+                except B.UnfingerprintableOpError:
+                    lineage[out_col] = None
+                    continue
+                sig = h(base + b"|ops:" + ops_fp)
+                lineage[out_col] = sig
+                fps[out_col] = sig.hex()
+            per_step[step_idx] = fps
+    final = {c: sig.hex() for c, sig in lineage.items() if sig is not None}
+    return per_step, final
+
+
+def step_column_fingerprints(
+    program: ShardProgram,
+) -> dict[int, dict[str, str]] | None:
+    """Cache-key fingerprints per clean step (see ``_lineage_fingerprints``)."""
+    walked = _lineage_fingerprints(program)
+    return None if walked is None else walked[0]
+
+
+def column_fingerprints(program: ShardProgram) -> dict[str, str] | None:
+    """End-of-program lineage fingerprint of every (fingerprintable)
+    column. None when the program holds cross-shard state (dedup)."""
+    walked = _lineage_fingerprints(program)
+    return None if walked is None else walked[1]
+
+
+# ---------------------------------------------------------------------------
+# On-disk shard cache (the Spark persist() analogue)
+# ---------------------------------------------------------------------------
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return Path(env)
+    return Path(tempfile.gettempdir()) / "repro_shard_cache"
+
+
+class ShardCache:
+    """Content-addressed store of cleaned column buffers.
+
+    One ``.npy`` file per (shard digest, column, lineage fingerprint).
+    Writes are atomic (tmp + rename); reads treat any malformed entry as a
+    miss and delete it, so a corrupted cache degrades to recompute.
+    """
+
+    def __init__(self, root: str | Path | None = None):
+        self.root = Path(root) if root is not None else default_cache_dir()
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def key(self, shard_digest: str, column: str, column_fp: str) -> str:
+        return hashlib.blake2b(
+            f"{shard_digest}:{column}:{column_fp}".encode(), digest_size=16
+        ).hexdigest()
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.npy"
+
+    def load(self, key: str) -> np.ndarray | None:
+        path = self._path(key)
+        try:
+            buf = np.load(path, allow_pickle=False)
+            if buf.dtype != np.uint8 or buf.ndim != 1:
+                raise ValueError("wrong cache payload shape")
+            return buf
+        except FileNotFoundError:
+            return None
+        except Exception:
+            # Corrupted entry (truncated write, garbage, wrong format):
+            # recompute instead of crashing, and drop the bad file.
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+
+    def store(self, key: str, buf: np.ndarray) -> None:
+        path = self._path(key)
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as fh:
+                    np.save(fh, buf, allow_pickle=False)
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except OSError:
+            pass  # cache is best-effort; never fail the pipeline
+
+
+# ---------------------------------------------------------------------------
+# Program execution (shared by thread and process workers)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardResult:
+    """One processed shard: the cleaned frame plus execution accounting.
+
+    ``payload`` holds the executor's ``postprocess(frame)`` output (e.g.
+    tokenized arrays) when a postprocess hook was installed."""
+
+    frame: ColumnarFrame
+    parse_s: float = 0.0
+    pre_clean_s: float = 0.0
+    clean_s: float = 0.0
+    post_clean_s: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    payload: Any = None
+    # Flat buffers not yet folded into ``frame`` (materialize=False only).
+    flat: dict = dataclasses.field(default_factory=dict)
+
+
+class GlobalDedup:
+    """Thread-safe keep-first dedup across shards (stream arrival order)."""
+
+    def __init__(self, subset: tuple[str, ...]):
+        self.subset = subset
+        self._seen: set = set()
+        self._lock = threading.Lock()
+
+    def keep_mask(self, frame: ColumnarFrame) -> np.ndarray:
+        cols = [frame[f] for f in self.subset]
+        n = len(frame)
+        # Build keys outside the lock so reader threads only serialize on
+        # the set membership check, not the per-row tuple construction.
+        keys = [tuple(c[i] for c in cols) for i in range(n)]
+        keep = np.ones(n, dtype=bool)
+        with self._lock:
+            for i, key in enumerate(keys):
+                if key in self._seen:
+                    keep[i] = False
+                else:
+                    self._seen.add(key)
+        return keep
+
+    def filter(self, frame: ColumnarFrame) -> ColumnarFrame:
+        return frame.take(self.keep_mask(frame))
+
+
+# -- flat-buffer row ops (cleaned columns stay flat through the program) ----
+
+
+def _flat_row_lengths(buf: np.ndarray) -> np.ndarray:
+    """Per-row byte length *including* the trailing separator."""
+    sep_idx = np.flatnonzero(buf == B.ROW_SEP)
+    return np.diff(np.concatenate(([-1], sep_idx))).astype(np.int64)
+
+
+def _flat_nonempty_mask(buf: np.ndarray) -> np.ndarray:
+    return _flat_row_lengths(buf) > 1
+
+
+def _flat_take(buf: np.ndarray, keep: np.ndarray) -> np.ndarray:
+    """Row-filter a flat buffer without decoding it."""
+    if buf.size == 0 or keep.all():
+        return buf
+    return buf[np.repeat(keep, _flat_row_lengths(buf))]
+
+
+def _run_clean_step(
+    frame: ColumnarFrame,
+    flat: dict[str, np.ndarray],
+    plans: Sequence[ColumnPlan],
+    cache: ShardCache | None,
+    step_fps: dict[str, str] | None,
+    digest: str | None,
+    result: ShardResult,
+) -> None:
+    """Run one stage-chain step over flat buffers, one cache lookup per
+    output column. A hit replaces the op chain with a disk read; a miss
+    (including a corrupt or row-count-stale entry) recomputes just that
+    column and rewrites the entry, so partially-changed plans only pay for
+    the columns whose lineage actually changed."""
+    n = len(frame)
+    cacheable = cache is not None and step_fps is not None and digest is not None
+    for in_col, out_col, ops in plans:
+        key = None
+        if cacheable:
+            fp = step_fps.get(out_col)
+            key = cache.key(digest, out_col, fp) if fp else None
+            hit = cache.load(key) if key else None
+            if hit is not None and B.n_rows(hit) == n:
+                flat[out_col] = hit
+                result.cache_hits += 1
+                continue
+        src = flat[in_col] if in_col in flat else frame.flat(in_col)
+        out = B.apply_ops(src, list(ops))
+        flat[out_col] = out
+        if key:
+            # Uncacheable columns (key None) count neither hit nor miss:
+            # no lookup happened, and a warm run should still report 100%.
+            result.cache_misses += 1
+            cache.store(key, out)
+
+
+def execute_program(
+    frame: ColumnarFrame,
+    program: ShardProgram,
+    *,
+    dedups: dict[int, GlobalDedup] | None = None,
+    cache: ShardCache | None = None,
+    col_fps: dict[int, dict[str, str]] | None = None,
+    digest: str | None = None,
+    materialize: bool = True,
+) -> ShardResult:
+    """Run every step of ``program`` on one parsed shard frame.
+
+    Cleaned columns live as *flat* byte buffers from their op chain until
+    the very end — row filters apply straight to the buffers — so no
+    decode/re-encode round trip happens inside the program. With
+    ``materialize=False`` the buffers are left in ``result.flat`` for
+    zero-copy transport (the process executor ships them via shared
+    memory); ``materialize=True`` folds them back into the frame.
+    """
+    result = ShardResult(frame)
+    flat: dict[str, np.ndarray] = {}
+    seen_clean = False
+    for step_idx, (kind, arg) in enumerate(program.steps):
+        t0 = time.perf_counter()
+        if kind == "select":
+            for c in arg:  # flat-only columns need a frame slot to survive
+                if c in flat and c not in frame.columns:
+                    frame = frame.ensure_column(c)
+            frame = frame.select([c for c in arg if c in frame.columns])
+            flat = {c: b for c, b in flat.items() if c in arg}
+        elif kind == "dropna":
+            keep = np.ones(len(frame), dtype=bool)
+            for c in arg:
+                if c in flat:
+                    keep &= _flat_nonempty_mask(flat[c])
+                else:
+                    col = frame[c]
+                    keep &= np.array(
+                        [v is not None and v != "" for v in col], dtype=bool
+                    )
+            if not keep.all():
+                frame = frame.take(keep)
+                flat = {c: _flat_take(b, keep) for c, b in flat.items()}
+        elif kind == "dedup":
+            if dedups is None:
+                raise UnsupportedPlanError(
+                    "dedup step requires executor-provided cross-shard state"
+                )
+            # Dedup compares real values: decode any flat subset column
+            # back into the frame first (dedup plans are thread-only and
+            # uncacheable, so this is the status-quo cost).
+            for c in dedups[step_idx].subset:
+                if c in flat:
+                    frame = frame.ensure_column(c).with_flat(c, flat.pop(c))
+            keep = dedups[step_idx].keep_mask(frame)
+            if not keep.all():
+                frame = frame.take(keep)
+                flat = {c: _flat_take(b, keep) for c, b in flat.items()}
+        elif kind == "clean":
+            step_fps = col_fps.get(step_idx) if col_fps is not None else None
+            _run_clean_step(frame, flat, arg, cache, step_fps, digest, result)
+        dt = time.perf_counter() - t0
+        if kind == "clean":
+            seen_clean = True
+            result.clean_s += dt
+        elif seen_clean:
+            result.post_clean_s += dt
+        else:
+            result.pre_clean_s += dt
+    if program.output_columns:
+        live = set(program.output_columns)
+        for c in live:
+            if c in flat and c not in frame.columns:
+                frame = frame.ensure_column(c)
+        frame = frame.select([c for c in frame.columns if c in live])
+        flat = {c: b for c, b in flat.items() if c in live}
+    if materialize:
+        for c, b in flat.items():
+            frame = frame.ensure_column(c).with_flat(c, b)
+        flat = {}
+    result.frame = frame
+    result.flat = flat
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Thread executor (the ShardPool path, now program-driven)
+# ---------------------------------------------------------------------------
+
+
+class ThreadShardExecutor:
+    """Work-stealing reader threads, one full program run per shard.
+
+    The only executor that supports cross-shard ``drop_duplicates`` (the
+    keep-first set lives in this process).
+    """
+
+    name = "thread"
+
+    def __init__(
+        self,
+        shards: Sequence[str | Path],
+        program: ShardProgram,
+        *,
+        workers: int = 2,
+        cache_dir: str | Path | None = None,
+        postprocess=None,
+    ):
+        self.program = program
+        self._postprocess = postprocess
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._cache = ShardCache(cache_dir) if cache_dir is not None else None
+        self._col_fps = step_column_fingerprints(program) if self._cache else None
+        self._dedups = {
+            i: GlobalDedup(arg)
+            for i, (kind, arg) in enumerate(program.steps)
+            if kind == "dedup"
+        }
+        self._agg_lock = threading.Lock()
+        self._parse_s = self._pre_s = self._clean_s = self._post_s = 0.0
+        self._pool = ShardPool(
+            shards, self._process, n_readers=max(int(workers), 1)
+        )
+
+    def _process(self, path: Path) -> ShardResult:
+        t0 = time.perf_counter()
+        if self._cache is not None:
+            data, digest = ing.read_shard_bytes(path)
+            frame = ing.parse_shard_bytes(data, self.program.fields)
+        else:
+            digest = None
+            frame = ing.parse_shard(path, self.program.fields)
+        parse_s = time.perf_counter() - t0
+        res = execute_program(
+            frame,
+            self.program,
+            dedups=self._dedups,
+            cache=self._cache,
+            col_fps=self._col_fps,
+            digest=digest,
+        )
+        res.parse_s = parse_s
+        if self._postprocess is not None:
+            # Runs inside the reader thread, so per-shard tokenization
+            # overlaps across shards exactly like cleaning does.
+            res.payload = self._postprocess(res.frame)
+        return res
+
+    def _account(self, res: ShardResult) -> None:
+        with self._agg_lock:
+            self._parse_s += res.parse_s
+            self._pre_s += res.pre_clean_s
+            self._clean_s += res.clean_s
+            self._post_s += res.post_clean_s
+            self.cache_hits += res.cache_hits
+            self.cache_misses += res.cache_misses
+
+    @property
+    def timings(self):
+        from .plan import StageTimings
+
+        return StageTimings(self._parse_s, self._pre_s, self._clean_s, self._post_s)
+
+    def __iter__(self) -> Iterator[ShardResult]:
+        for res in self._pool:
+            self._account(res)
+            yield res
+
+    def stop(self) -> None:
+        self._pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# Process executor (shared-memory transport, self-scheduling workers)
+# ---------------------------------------------------------------------------
+
+
+def shared_memory_available() -> bool:
+    try:
+        from multiprocessing import shared_memory
+
+        seg = shared_memory.SharedMemory(create=True, size=16)
+        seg.close()
+        seg.unlink()
+        return True
+    except Exception:  # pragma: no cover - platform without /dev/shm
+        return False
+
+
+def _utf8_roundtrips(v: str) -> bool:
+    """False for strings flatten() would mangle (lone surrogates from the
+    stdlib-json fallback): those must ride the obj_rows side channel so
+    the process executor stays value-identical with the thread path."""
+    try:
+        v.encode("utf-8")
+        return "\x00" not in v
+    except UnicodeEncodeError:
+        return False
+
+
+def _pack_columns(
+    frame: ColumnarFrame, flat: dict[str, np.ndarray], columns: Sequence[str]
+) -> tuple[bytes, list[dict]]:
+    """Pack columns as (flat uint8 bytes + int64 row-end offsets) sections.
+
+    Cleaned columns ship their program-output buffer as-is (no re-encode);
+    untouched columns flatten here and carry their non-string originals
+    (None, numbers, …) in the metadata so the round trip is value-exact —
+    the thread and whole-frame executors never coerce those."""
+    parts: list[bytes] = []
+    metas: list[dict] = []
+    pos = 0
+    for col in columns:
+        if col in flat:
+            buf = flat[col]
+            obj_rows: list[tuple[int, Any]] = []  # op output is always a string
+        else:
+            buf = frame.flat(col)
+            obj_rows = [
+                (i, v)
+                for i, v in enumerate(frame[col])
+                if not isinstance(v, str) or not _utf8_roundtrips(v)
+            ]
+        offsets = np.flatnonzero(buf == B.ROW_SEP).astype(np.int64)
+        raw = buf.tobytes()
+        offs = offsets.tobytes()
+        metas.append(
+            {
+                "name": col,
+                "buf_off": pos,
+                "buf_len": len(raw),
+                "offs_off": pos + len(raw),
+                "n_rows": int(offsets.size),
+                "obj_rows": obj_rows,
+            }
+        )
+        parts.append(raw)
+        parts.append(offs)
+        pos += len(raw) + len(offs)
+    return b"".join(parts), metas
+
+
+def _unpack_columns(payload: memoryview, metas: list[dict]) -> ColumnarFrame:
+    cols: dict[str, np.ndarray] = {}
+    for m in metas:
+        raw = bytes(payload[m["buf_off"] : m["buf_off"] + m["buf_len"]])
+        offsets = np.frombuffer(
+            payload, dtype=np.int64, count=m["n_rows"], offset=m["offs_off"]
+        )
+        starts = np.concatenate(([0], offsets[:-1] + 1)) if m["n_rows"] else []
+        rows: list = [
+            raw[s:e].decode("utf-8", errors="ignore")
+            for s, e in zip(starts, offsets)
+        ]
+        for i, v in m["obj_rows"]:
+            rows[i] = v
+        cols[m["name"]] = np.array(rows, dtype=object)
+    return ColumnarFrame(cols)
+
+
+def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
+    """Worker process: pull (shm, size, digest) tasks until sentinel."""
+    from multiprocessing import shared_memory
+
+    cache = ShardCache(cache_dir) if cache_dir is not None else None
+    col_fps = step_column_fingerprints(program) if cache is not None else None
+    while True:
+        task = task_q.get()
+        if task is None:
+            break
+        task_id, shm_name, nbytes, digest = task
+        try:
+            t0 = time.perf_counter()
+            seg = shared_memory.SharedMemory(name=shm_name)
+            try:
+                data = bytes(seg.buf[:nbytes])
+            finally:
+                seg.close()
+            frame = ing.parse_shard_bytes(data, program.fields)
+            parse_s = time.perf_counter() - t0
+            res = execute_program(
+                frame,
+                program,
+                cache=cache,
+                col_fps=col_fps,
+                digest=digest,
+                materialize=False,
+            )
+            res.parse_s = parse_s
+            out_cols = list(dict.fromkeys(list(res.frame.columns) + list(res.flat)))
+            payload, metas = _pack_columns(res.frame, res.flat, out_cols)
+            out = shared_memory.SharedMemory(create=True, size=max(len(payload), 1))
+            out.buf[: len(payload)] = payload
+            out_name = out.name
+            out.close()
+            result_q.put(
+                (
+                    "ok",
+                    task_id,
+                    {
+                        "shm": out_name,
+                        "size": len(payload),
+                        "columns": metas,
+                        "parse_s": res.parse_s,
+                        "pre_clean_s": res.pre_clean_s,
+                        "clean_s": res.clean_s,
+                        "post_clean_s": res.post_clean_s,
+                        "cache_hits": res.cache_hits,
+                        "cache_misses": res.cache_misses,
+                    },
+                )
+            )
+        except BaseException:
+            result_q.put(("err", task_id, traceback.format_exc()))
+
+
+class ProcessShardExecutor:
+    """Worker processes pulling shards from a shared queue (work stealing).
+
+    Transport is shared memory in both directions: the feeder thread reads
+    each shard once (digesting as it reads), places the raw bytes in a
+    segment, and workers return cleaned flat column buffers + row offsets
+    in a segment of their own. In-flight shards are bounded so the feeder
+    never races ahead of slow consumers.
+    """
+
+    name = "process"
+
+    def __init__(
+        self,
+        shards: Sequence[str | Path],
+        program: ShardProgram,
+        *,
+        workers: int = 2,
+        cache_dir: str | Path | None = None,
+        max_inflight: int | None = None,
+        postprocess=None,
+    ):
+        self._postprocess = postprocess
+        if program.has_dedup:
+            raise UnsupportedPlanError(
+                "drop_duplicates needs cross-shard state; use the thread executor"
+            )
+        self.program = program
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._parse_s = self._pre_s = self._clean_s = self._post_s = 0.0
+        self._shards = [Path(s) for s in shards]
+        self._stopped = threading.Event()
+        self._feed_errors: list[BaseException] = []
+        self._inflight = threading.Semaphore(max_inflight or max(2 * workers, 4))
+        self._in_segs: dict[int, str] = {}
+        self._seg_lock = threading.Lock()
+        # Start the resource-tracker daemon before forking: workers must
+        # inherit it, or each spawns its own and cross-process unlinks are
+        # reported as leaks at shutdown.
+        shared_memory_available()
+        # fork shares the parsed program and avoids re-importing jax in
+        # every worker; spawn is the portable fallback.
+        methods = mp.get_all_start_methods()
+        ctx = mp.get_context("fork" if "fork" in methods else "spawn")
+        self._task_q = ctx.Queue()
+        self._result_q = ctx.Queue()
+        self._procs = [
+            ctx.Process(
+                target=_worker_main,
+                args=(self._task_q, self._result_q, program, cache_dir),
+                daemon=True,
+            )
+            for _ in range(max(int(workers), 1))
+        ]
+        for p in self._procs:
+            p.start()
+        self._feeder = threading.Thread(target=self._feed, daemon=True)
+        self._feeder.start()
+
+    def _feed(self) -> None:
+        from multiprocessing import shared_memory
+
+        try:
+            for i, path in enumerate(self._shards):
+                while not self._inflight.acquire(timeout=0.1):
+                    if self._stopped.is_set():
+                        return
+                if self._stopped.is_set():
+                    return
+                data, digest = ing.read_shard_bytes(path)
+                seg = shared_memory.SharedMemory(create=True, size=max(len(data), 1))
+                seg.buf[: len(data)] = data
+                with self._seg_lock:
+                    self._in_segs[i] = seg.name
+                self._task_q.put((i, seg.name, len(data), digest))
+                seg.close()
+        except BaseException as e:  # deleted shard, /dev/shm full, ...
+            # Surface the real cause to the consumer; without this the
+            # consumer only sees "workers exited before delivering".
+            self._feed_errors.append(e)
+        finally:
+            for _ in self._procs:
+                self._task_q.put(None)
+
+    def _release_input(self, task_id: int) -> None:
+        from multiprocessing import shared_memory
+
+        with self._seg_lock:
+            name = self._in_segs.pop(task_id, None)
+        if name is not None:
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+                seg.close()
+                seg.unlink()
+            except FileNotFoundError:
+                pass
+
+    def _next_result(self):
+        """Result-queue get that notices dead workers instead of blocking
+        forever (an OOM-killed or segfaulted worker never sends its
+        result)."""
+        import queue as _queue
+
+        while True:
+            try:
+                return self._result_q.get(timeout=1.0)
+            except _queue.Empty:
+                if self._feed_errors:
+                    raise self._feed_errors[0]
+                crashed = [
+                    p.exitcode
+                    for p in self._procs
+                    if not p.is_alive() and p.exitcode not in (0, None)
+                ]
+                if crashed:
+                    raise RuntimeError(
+                        f"shard worker died with exit code {crashed[0]} "
+                        "(no result for its shard)"
+                    )
+                if all(not p.is_alive() for p in self._procs):
+                    raise RuntimeError(
+                        "all shard workers exited before delivering every result"
+                    )
+
+    def __iter__(self) -> Iterator[ShardResult]:
+        from multiprocessing import shared_memory
+
+        for _ in range(len(self._shards)):
+            if self._stopped.is_set():
+                return
+            try:
+                msg = self._next_result()
+            except BaseException:
+                self.stop()
+                raise
+            status, task_id, body = msg
+            self._release_input(task_id)
+            self._inflight.release()
+            if status == "err":
+                self.stop()
+                raise RuntimeError(f"shard worker failed:\n{body}")
+            seg = shared_memory.SharedMemory(name=body["shm"])
+            try:
+                frame = _unpack_columns(seg.buf[: body["size"]], body["columns"])
+            finally:
+                seg.close()
+                seg.unlink()
+            self._parse_s += body["parse_s"]
+            self._pre_s += body["pre_clean_s"]
+            self._clean_s += body["clean_s"]
+            self._post_s += body["post_clean_s"]
+            self.cache_hits += body["cache_hits"]
+            self.cache_misses += body["cache_misses"]
+            res = ShardResult(
+                frame,
+                parse_s=body["parse_s"],
+                pre_clean_s=body["pre_clean_s"],
+                clean_s=body["clean_s"],
+                post_clean_s=body["post_clean_s"],
+                cache_hits=body["cache_hits"],
+                cache_misses=body["cache_misses"],
+            )
+            if self._postprocess is not None:
+                res.payload = self._postprocess(frame)
+            yield res
+
+    @property
+    def timings(self):
+        from .plan import StageTimings
+
+        return StageTimings(self._parse_s, self._pre_s, self._clean_s, self._post_s)
+
+    def _drain_results(self) -> None:
+        from multiprocessing import shared_memory
+
+        try:
+            while True:
+                msg = self._result_q.get_nowait()
+                if msg[0] == "ok":
+                    try:
+                        seg = shared_memory.SharedMemory(name=msg[2]["shm"])
+                        seg.close()
+                        seg.unlink()
+                    except FileNotFoundError:
+                        pass
+                self._release_input(msg[1])
+        except Exception:
+            pass
+
+    def stop(self) -> None:
+        """Abandon remaining shards; safe after breaking out early.
+        Idempotent."""
+        if self._stopped.is_set():
+            return
+        self._stopped.set()
+        self._inflight.release()  # unblock a parked feeder
+        self._feeder.join(timeout=5.0)
+        # Abandon queued tasks so workers reach their sentinels quickly
+        # (the feeder's sentinels sit behind them in the queue).
+        try:
+            while True:
+                task = self._task_q.get_nowait()
+                if task is not None:
+                    self._release_input(task[0])
+        except Exception:
+            pass
+        for _ in self._procs:
+            self._task_q.put(None)
+        self._drain_results()
+        for p in self._procs:
+            p.join(timeout=2.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=2.0)
+        # Results a worker managed to emit between the drains above.
+        self._drain_results()
+        from multiprocessing import shared_memory
+
+        with self._seg_lock:
+            leftover = list(self._in_segs.values())
+            self._in_segs.clear()
+        for name in leftover:
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+                seg.close()
+                seg.unlink()
+            except FileNotFoundError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Executor selection
+# ---------------------------------------------------------------------------
+
+
+def make_executor(
+    shards: Sequence[str | Path],
+    program: ShardProgram,
+    *,
+    workers: int = 2,
+    cache_dir: str | Path | None = None,
+    executor: str | None = None,
+    postprocess=None,
+):
+    """Pick the physical shard executor.
+
+    Explicit ``executor`` wins, then ``REPRO_EXECUTOR``, then the default:
+    processes when ``workers > 1``, threads otherwise. Requests for the
+    process executor fall back to threads — never error — when the program
+    needs cross-shard dedup state, the platform lacks shared memory, or
+    ``workers <= 1``.
+    """
+    choice = executor or os.environ.get("REPRO_EXECUTOR") or ""
+    choice = choice.strip().lower()
+    if choice not in ("", "thread", "process"):
+        raise ValueError(f"unknown executor {choice!r}; use 'thread' or 'process'")
+    explicit = bool(choice)
+    if not choice:
+        choice = "process" if workers > 1 else "thread"
+    # More worker processes than cores only adds fork + scheduling cost;
+    # clamp (the thread pool is unclamped — its readers overlap blocking
+    # I/O, not CPU). When the *default* selection lands on one effective
+    # worker the process executor is pure overhead, so fall back to
+    # threads — but an explicit request (argument or REPRO_EXECUTOR, e.g.
+    # the CI job exercising this path) is honored even on one core.
+    n_proc = max(min(workers, os.cpu_count() or workers), 1)
+    if choice == "process" and (
+        workers <= 1
+        or program.has_dedup
+        or not shared_memory_available()
+        or (n_proc <= 1 and not explicit)
+    ):
+        choice = "thread"
+    if choice == "process" and "fork" not in mp.get_all_start_methods():
+        # spawn-only platforms pickle the program into each worker; a plan
+        # with a lambda predicate executes fine in-process, so degrade to
+        # threads instead of crashing at Process.start().
+        import pickle
+
+        try:
+            pickle.dumps(program)
+        except Exception:
+            choice = "thread"
+    if choice == "process":
+        return ProcessShardExecutor(
+            shards, program, workers=n_proc, cache_dir=cache_dir,
+            postprocess=postprocess,
+        )
+    return ThreadShardExecutor(
+        shards, program, workers=workers, cache_dir=cache_dir,
+        postprocess=postprocess,
+    )

@@ -11,6 +11,7 @@ process pool; on this 1-core container it degrades gracefully to serial.
 
 from __future__ import annotations
 
+import hashlib
 import os
 from concurrent.futures import ProcessPoolExecutor
 from pathlib import Path
@@ -41,18 +42,51 @@ def _normalize(value):
     return value
 
 
-def _parse_file(args) -> dict[str, list]:
-    path, fields = args
+def _parse_line_iter(lines: Iterable[bytes], fields: Sequence[str]) -> dict[str, list]:
+    """One parse loop shared by the streaming and in-memory paths — they
+    must never drift, or the executors stop being byte-identical."""
     cols: dict[str, list] = {f: [] for f in fields}
-    with open(path, "rb") as fh:
-        for line in fh:
-            line = line.strip()
-            if not line:
-                continue
-            rec = _loads(line)
-            for f in fields:
-                cols[f].append(_normalize(rec.get(f)))
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        rec = _loads(line)
+        for f in fields:
+            cols[f].append(_normalize(rec.get(f)))
     return cols
+
+
+def _parse_lines(data: bytes, fields: Sequence[str]) -> dict[str, list]:
+    return _parse_line_iter(data.split(b"\n"), fields)
+
+
+def _parse_file(args) -> dict[str, list]:
+    # Streams line by line: whole-frame ingest() must not hold full shard
+    # bytes in memory (only the executor/cache path needs them, for the
+    # digest — that's read_shard_bytes).
+    path, fields = args
+    with open(path, "rb") as fh:
+        return _parse_line_iter(fh, fields)
+
+
+def shard_digest(data: bytes) -> str:
+    """Content digest of raw shard bytes — half of the shard-cache key (the
+    other half is the plan fingerprint; see :mod:`repro.core.executor`)."""
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def read_shard_bytes(path: str | Path) -> tuple[bytes, str]:
+    """Read one shard file, digesting during the read (one pass over the
+    bytes, shared by caching and parsing)."""
+    with open(path, "rb") as fh:
+        data = fh.read()
+    return data, shard_digest(data)
+
+
+def parse_shard_bytes(data: bytes, fields: Sequence[str]) -> ColumnarFrame:
+    """Parse raw shard bytes (e.g. out of a shared-memory buffer)."""
+    cols = _parse_lines(data, tuple(fields))
+    return ColumnarFrame({f: np.array(cols[f], dtype=object) for f in fields})
 
 
 def parse_shard(path: str | Path, fields: Sequence[str]) -> ColumnarFrame:

@@ -73,7 +73,7 @@ def run_p3sapp(
     directories: Sequence[str | Path],
     fields: Sequence[str] = ("title", "abstract"),
     stages: Sequence[Stage] | None = None,
-    workers: int = 1,
+    workers: int | None = None,
     optimize: bool = False,
 ) -> tuple[list[dict], StageTimings]:
     """Algorithm 1. Returns (records a.k.a. the pandas frame, timings).

@@ -17,14 +17,19 @@ not just the cleaning segment:
 * **Physical executors** — :func:`execute_frame_plan` runs the frame-level
   prefix whole-frame with the paper's stage-timing attribution
   (:class:`StageTimings`), while :func:`stream_batches` runs the same plan
-  per shard over a work-stealing :class:`~repro.core.async_loader.ShardPool`
-  so cleaning/tokenizing/batching overlap device compute end-to-end when
-  fed into an :class:`~repro.core.async_loader.AsyncLoader`.
+  per shard over a work-stealing shard executor — reader threads or worker
+  processes with shared-memory transport and an optional plan-fingerprint
+  shard cache (:mod:`repro.core.executor`) — so cleaning/tokenizing/batching
+  overlap device compute end-to-end when fed into an
+  :class:`~repro.core.async_loader.AsyncLoader`.
+* **Fingerprints** — :func:`plan_fingerprint` stably hashes the optimized
+  plan; composed per column with each shard's bytes digest it keys the
+  on-disk shard cache (the Spark ``persist()`` analogue).
 """
 
 from __future__ import annotations
 
-import threading
+import hashlib
 import time
 from dataclasses import dataclass
 from pathlib import Path
@@ -33,8 +38,8 @@ from typing import Any, Iterator, Sequence
 import numpy as np
 
 from ..data.batching import TokenSpec, encode_frame_columns, pad_batch, split_indices
+from . import bytesops as B
 from . import ingest as ing
-from .async_loader import ShardPool
 from .frame import ColumnarFrame
 from .pipeline import ColumnPlan, compile_column_plans, run_column_plans
 from .stages import Stage
@@ -267,6 +272,49 @@ def optimize_plan(
     return out
 
 
+def _node_signature(node: PlanNode) -> bytes:
+    """Stable byte signature of one node (parameter-exact for stages)."""
+    if isinstance(node, ApplyStages):
+        parts = [b"ApplyStages"]
+        for s in node.stages:
+            parts.append(
+                f"{type(s).__name__}[{s.input_col}->{s.output_col}]".encode()
+                + b":"
+                + B.ops_fingerprint(s.flat_ops()).encode()
+            )
+        return b"|".join(parts)
+    if isinstance(node, SourceJsonDirs):
+        # describe() elides the directory list; the fingerprint must not.
+        return f"SourceJsonDirs({list(node.directories)}, {list(node.fields)})".encode()
+    if isinstance(node, SourceFrame):
+        return f"SourceFrame(rows={len(node.frame)}, fields={node.frame.field_names})".encode()
+    # Remaining nodes are fully described by their parameters (Tokenize's
+    # describe() covers the specs; tokenizer identity is deliberately
+    # excluded — fingerprints key *preprocessing*, not vocabularies).
+    return node.describe().encode()
+
+
+def plan_fingerprint(
+    nodes: Sequence[PlanNode], final_schema: Sequence[str] = (), optimize: bool = True
+) -> str:
+    """Stable hex fingerprint of the (optimized) plan.
+
+    Changes whenever any node or any stage op parameter changes; invariant
+    under re-construction of an identical chain. The shard cache composes
+    this per column (see :func:`repro.core.executor.column_fingerprints`)
+    with the source shard's bytes digest.
+    """
+    frame_nodes, array_nodes = split_plan(nodes)
+    if optimize:
+        frame_nodes = optimize_plan(frame_nodes, final_schema)
+    h = hashlib.blake2b(digest_size=16)
+    for node in list(frame_nodes) + list(array_nodes):
+        sig = _node_signature(node)
+        h.update(len(sig).to_bytes(8, "little"))
+        h.update(sig)
+    return h.hexdigest()
+
+
 def explain(
     nodes: Sequence[PlanNode], final_schema: Sequence[str] = (), optimize: bool = True
 ) -> str:
@@ -376,32 +424,8 @@ def execute_array_nodes(
 
 
 # ---------------------------------------------------------------------------
-# Streaming physical executor: per-shard over ShardPool
+# Streaming physical executor: per-shard over a shard executor
 # ---------------------------------------------------------------------------
-
-
-class _GlobalDedup:
-    """Thread-safe keep-first dedup across shards (stream arrival order)."""
-
-    def __init__(self, subset: tuple[str, ...]):
-        self.subset = subset
-        self._seen: set = set()
-        self._lock = threading.Lock()
-
-    def filter(self, frame: ColumnarFrame) -> ColumnarFrame:
-        cols = [frame[f] for f in self.subset]
-        n = len(frame)
-        # Build keys outside the lock so reader threads only serialize on
-        # the set membership check, not the per-row tuple construction.
-        keys = [tuple(c[i] for c in cols) for i in range(n)]
-        keep = np.ones(n, dtype=bool)
-        with self._lock:
-            for i, key in enumerate(keys):
-                if key in self._seen:
-                    keep[i] = False
-                else:
-                    self._seen.add(key)
-        return frame.take(keep)
 
 
 def _batched(
@@ -458,9 +482,14 @@ def stream_batches(
     epochs: int | None = 1,
     shuffle_buffer: int | None = None,
     final_schema: Sequence[str] = (),
+    executor: str | None = None,
+    cache_dir: str | Path | None = None,
+    stats: dict | None = None,
 ) -> Iterator[dict[str, np.ndarray]]:
-    """Per-shard streaming execution: parse → filter → clean → tokenize each
-    shard inside a work-stealing ShardPool, batching across shard boundaries.
+    """Per-shard streaming execution: parse → filter → clean each shard
+    inside a shard executor (reader threads or worker processes, see
+    :func:`repro.core.executor.make_executor`), then tokenize and batch
+    across shard boundaries.
 
     Preprocessing of shard k+1 overlaps consumption of shard k, so when the
     resulting iterator feeds an AsyncLoader the host pipeline runs fully
@@ -470,7 +499,15 @@ def stream_batches(
     then interchangeable rows — so partial-subset drop_duplicates is
     rejected here (whichever shard won the race would decide which variant
     survives).
+
+    ``cache_dir`` enables the plan-fingerprint shard cache; ``executor``
+    forces ``"thread"``/``"process"`` (default: env ``REPRO_EXECUTOR``, then
+    processes when ``workers > 1``). When ``stats`` is a dict it receives
+    ``executor``, ``cache_hits``, ``cache_misses`` and per-epoch ``timings``
+    after each epoch completes.
     """
+    from . import executor as EX
+
     frame_nodes, array_nodes = split_plan(nodes)
     if optimize:
         frame_nodes = optimize_plan(frame_nodes, final_schema)
@@ -493,49 +530,50 @@ def stream_batches(
             )
 
     shards = ing.list_shards(src.directories)
-    # Compile each stage chain once; reuse across shards and epochs.
-    compiled: list[tuple[PlanNode, Any]] = []
-    for node in frame_nodes[1:]:
-        if isinstance(node, ApplyStages):
-            compiled.append((node, compile_column_plans(node.stages, optimize)))
-        else:
-            compiled.append((node, None))
+    # Compile the per-shard program once; reuse across shards and epochs.
+    spec_cols = tuple(dict.fromkeys(spec.column for spec in tok.specs))
+    program = EX.compile_shard_program(
+        frame_nodes, optimize=optimize, output_columns=spec_cols
+    )
 
     epoch = 0
     while epochs is None or epoch < epochs:
-        dedups = {
-            id(n): _GlobalDedup(n.subset)
-            for n, _ in compiled
-            if isinstance(n, DropDuplicates)
-        }
-
-        def process(path: Path) -> dict[str, np.ndarray]:
-            frame = ing.parse_shard(path, src.fields)
-            for node, plans in compiled:
-                if isinstance(node, Select):
-                    frame = frame.select(list(node.fields))
-                elif isinstance(node, DropNA):
-                    frame = frame.dropna(list(node.subset))
-                elif isinstance(node, DropDuplicates):
-                    frame = dedups[id(node)].filter(frame)
-                elif isinstance(node, ApplyStages):
-                    frame = run_column_plans(frame, plans, workers=1)
+        def encode(frame: ColumnarFrame) -> dict[str, np.ndarray]:
             columns = {spec.column: frame[spec.column] for spec in tok.specs}
             return encode_frame_columns(columns, tok.tokenizer, tok.specs)
 
-        pool = ShardPool(shards, process, n_readers=max(workers, 1))
+        exec_ = EX.make_executor(
+            shards,
+            program,
+            workers=max(workers, 1),
+            cache_dir=cache_dir,
+            executor=executor,
+            postprocess=encode,
+        )
+
+        def chunks() -> Iterator[dict[str, np.ndarray]]:
+            for res in exec_:
+                yield res.payload
+
         rng = np.random.default_rng(batch.seed + epoch)
         buffer = shuffle_buffer or max(8 * batch.batch_size, 1024)
         produced = 0
         try:
-            for b in _batched(iter(pool), batch, rng, buffer):
+            for b in _batched(chunks(), batch, rng, buffer):
                 produced += 1
                 yield b
         finally:
             # Abandoned mid-epoch (consumer broke out / AsyncLoader closed):
-            # stop the readers instead of preprocessing the rest of the
+            # stop the workers instead of preprocessing the rest of the
             # corpus into a queue nobody drains.
-            pool.stop()
+            exec_.stop()
+            if stats is not None:
+                stats["executor"] = exec_.name
+                stats["cache_hits"] = stats.get("cache_hits", 0) + exec_.cache_hits
+                stats["cache_misses"] = (
+                    stats.get("cache_misses", 0) + exec_.cache_misses
+                )
+                stats["timings"] = exec_.timings
         if not produced:
             return  # empty epoch: stop instead of re-reading the corpus forever
         epoch += 1

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..pallas_compat import tpu_compiler_params
+
 
 def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref):
     x = x_ref[...]  # (blk_b, d_in)
@@ -84,7 +86,7 @@ def lstm_cell(
             pl.BlockSpec((blk_b, blk_h), lambda bi, hi: (bi, hi)),
         ],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,30 @@
+"""Version compatibility shims for Pallas TPU kernels.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``); resolving it here
+keeps every kernel importable (and runnable under ``interpret=True`` on CPU)
+on any JAX the container ships.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """``compiler_params=`` value for ``pl.pallas_call`` on any JAX version.
+
+    Returns None (meaning "compiler defaults") when neither class exists or
+    the installed class rejects the requested fields — correctness never
+    depends on these hints, only scheduling.
+    """
+    if _PARAMS_CLS is None:  # pragma: no cover - ancient jax
+        return None
+    try:
+        return _PARAMS_CLS(**kwargs)
+    except TypeError:  # pragma: no cover - field renamed/removed upstream
+        return None

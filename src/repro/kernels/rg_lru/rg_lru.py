@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..pallas_compat import tpu_compiler_params
+
 
 def _rg_lru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, blk_s: int):
     si = pl.program_id(2)
@@ -69,7 +71,7 @@ def rg_lru(
         out_specs=pl.BlockSpec((1, blk_s, blk_d), lambda bi, di, si: (bi, si, di)),
         out_shape=jax.ShapeDtypeStruct((bt, s, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((blk_d,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..pallas_compat import tpu_compiler_params
+
 SPACE = 32
 
 
@@ -66,7 +68,7 @@ def text_clean(
         in_specs=[pl.BlockSpec((blk_rows, width), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((blk_rows, width), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, width), jnp.uint8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

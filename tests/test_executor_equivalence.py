@@ -1,0 +1,301 @@
+"""Differential harness for the three physical executors.
+
+Whole-frame (:func:`repro.core.plan.execute_frame_plan`), streaming-thread
+(:class:`repro.core.executor.ThreadShardExecutor`) and multi-process
+(:class:`repro.core.executor.ProcessShardExecutor`) execution of the same
+plan must produce byte-identical record multisets (arrival order is
+nondeterministic under work stealing) and attribute wall time to the same
+set of paper stages. Corpora are hypothesis-generated and include the nasty
+cases: unicode, empty rows, NUL bytes, giant rows.
+"""
+
+import json
+import random
+
+import pytest
+
+try:  # hypothesis drives the property search when installed (CI); the
+    # deterministic + seeded-fuzz corpora below run everywhere regardless.
+    from hypothesis import HealthCheck, example, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - bare container
+    HAVE_HYPOTHESIS = False
+
+from repro.core import executor as EX
+from repro.core import ingest as ing
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.frame import ColumnarFrame
+from repro.core.p3sapp import case_study_stages
+from repro.data.batching import seq2seq_specs
+from repro.data.tokenizer import WordTokenizer
+
+FIELDS = ("title", "abstract")
+
+_FUZZ_CHARS = (
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789"
+    " <>()'.,!?-\t\x00ΩμέλΛñé漢字🙂"
+)
+
+
+def fuzz_records(seed: int, n: int) -> list[dict]:
+    """Seeded pseudo-random corpus over the same nasty alphabet the
+    hypothesis strategy draws from."""
+    rng = random.Random(seed)
+
+    def text():
+        roll = rng.random()
+        if roll < 0.1:
+            return None
+        if roll < 0.2:
+            return ""
+        return "".join(rng.choice(_FUZZ_CHARS) for _ in range(rng.randrange(1, 60)))
+
+    return [{"title": text(), "abstract": text()} for _ in range(n)]
+
+
+EDGE_RECORDS = [
+    {"title": "", "abstract": ""},  # empty row
+    {"title": None, "abstract": "only abstract survives dropna? no"},  # null
+    {"title": "NUL\x00inside", "abstract": "tab\there and CR"},  # NUL bytes
+    {"title": "Ωμέγα ένα <b>δύο</b>", "abstract": "naïve café — résumé 漢字"},
+    {"title": "plain Title 42", "abstract": "The QUICK brown fox isn't slow."},
+]
+GIANT_RECORDS = [
+    {
+        "title": "Giant <b>Row</b> " + "Lorem IPSUM (drop me) " * 2000,
+        "abstract": "word " * 20_000 + "end",
+    },
+    {"title": "small", "abstract": "row"},
+]
+
+
+def write_shards(root, records, n_files=3):
+    d = root / "corpus"
+    d.mkdir(parents=True, exist_ok=True)
+    for i in range(n_files):
+        with open(d / f"s{i}.jsonl", "w", encoding="utf-8") as fh:
+            for r in records[i::n_files]:
+                fh.write(json.dumps(r, ensure_ascii=False) + "\n")
+    return d
+
+
+def chain(d):
+    """The canonical Algorithm 1 chain (sans dedup, so every executor —
+    including the process pool — can run it)."""
+    return (
+        Dataset.from_json_dirs([d], FIELDS)
+        .dropna(FIELDS)
+        .apply(*case_study_stages())
+        .dropna(FIELDS)
+    )
+
+
+def optimized_program(ds):
+    frame_nodes, _ = P.split_plan(ds.plan)
+    opt = P.optimize_plan(frame_nodes, ds.schema)
+    return EX.compile_shard_program(opt, optimize=True)
+
+
+def record_multiset(records):
+    return sorted(tuple(sorted(r.items(), key=lambda kv: kv[0])) for r in records)
+
+
+def executor_records(executor):
+    frames = [res.frame for res in executor]
+    executor.stop()
+    if not frames:
+        return []
+    return ColumnarFrame.concat(frames).to_records()
+
+
+def nonzero_stages(timings):
+    return {
+        name
+        for name in ("ingestion", "pre_cleaning", "cleaning", "post_cleaning")
+        if getattr(timings, name) > 0.0
+    }
+
+
+# ---------------------------------------------------------------------------
+# the differential property
+# ---------------------------------------------------------------------------
+
+
+def check_three_executors(root, records):
+    d = write_shards(root, records)
+    ds = chain(d)
+    frame_nodes, _ = P.split_plan(ds.plan)
+    frame, whole_t = P.execute_frame_plan(frame_nodes, final_schema=ds.schema)
+    want = record_multiset(frame.to_records())
+
+    program = optimized_program(ds)
+    shards = ing.list_shards([d])
+
+    thread_ex = EX.ThreadShardExecutor(shards, program, workers=2)
+    got_thread = record_multiset(executor_records(thread_ex))
+    assert got_thread == want
+
+    proc_ex = EX.ProcessShardExecutor(shards, program, workers=2)
+    got_proc = record_multiset(executor_records(proc_ex))
+    assert got_proc == want
+
+    # Identical timing attribution: all three executors charge the same
+    # paper stages (values differ, the *stage set* must not).
+    assert nonzero_stages(thread_ex.timings) == nonzero_stages(whole_t)
+    assert nonzero_stages(proc_ex.timings) == nonzero_stages(whole_t)
+
+
+@pytest.mark.parametrize(
+    "records",
+    [
+        pytest.param([], id="empty-corpus"),
+        pytest.param(EDGE_RECORDS, id="edge-cases"),
+        pytest.param(GIANT_RECORDS, id="giant-rows"),
+        pytest.param(fuzz_records(1, 40), id="fuzz-1"),
+        pytest.param(fuzz_records(2, 40), id="fuzz-2"),
+    ],
+)
+def test_three_executors_byte_identical(tmp_path, records):
+    check_three_executors(tmp_path, records)
+
+
+if HAVE_HYPOTHESIS:
+    TEXT = st.text(
+        alphabet=st.one_of(
+            st.characters(min_codepoint=32, max_codepoint=126),
+            st.sampled_from("ΩμέλΛñé漢字🙂\t\x00"),
+        ),
+        max_size=40,
+    )
+    RECORDS = st.lists(
+        st.fixed_dictionaries(
+            {
+                "title": st.none() | st.just("") | TEXT,
+                "abstract": st.none() | st.just("") | TEXT,
+            }
+        ),
+        max_size=24,
+    )
+
+    @settings(
+        max_examples=6,
+        deadline=None,
+        suppress_health_check=[HealthCheck.function_scoped_fixture],
+    )
+    @given(records=RECORDS)
+    @example(records=EDGE_RECORDS)
+    def test_three_executors_byte_identical_property(tmp_path, records):
+        check_three_executors(tmp_path, records)
+
+
+def test_dedup_plan_thread_matches_whole_frame(tmp_path):
+    records = EDGE_RECORDS + EDGE_RECORDS  # every row duplicated across shards
+    d = write_shards(tmp_path, records)
+    ds = (
+        Dataset.from_json_dirs([d], FIELDS)
+        .dropna(FIELDS)
+        .drop_duplicates(FIELDS)
+        .apply(*case_study_stages())
+    )
+    frame_nodes, _ = P.split_plan(ds.plan)
+    frame, _ = P.execute_frame_plan(frame_nodes, final_schema=ds.schema)
+    want = record_multiset(frame.to_records())
+
+    program = optimized_program(ds)
+    assert program.has_dedup
+    got = record_multiset(
+        executor_records(
+            EX.ThreadShardExecutor(ing.list_shards([d]), program, workers=3)
+        )
+    )
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# full streaming pipeline (tokenize + batch) across executors
+# ---------------------------------------------------------------------------
+
+
+def batch_rows(batches):
+    rows = []
+    for b in batches:
+        keys = sorted(b)
+        for i in range(len(b[keys[0]])):
+            rows.append(tuple(bytes(b[k][i].tobytes()) for k in keys))
+    return sorted(rows)
+
+
+def test_streaming_batches_match_across_executors(tmp_path):
+    d = write_shards(tmp_path, EDGE_RECORDS * 8, n_files=4)
+    base = chain(d)
+    tok = WordTokenizer.fit(
+        [r["abstract"] or "" for r in base.collect().to_records()]
+    )
+
+    def pipe():
+        return (
+            chain(d)
+            .tokenize(tok, seq2seq_specs(max_abstract_len=16, max_title_len=8))
+            .batch(4, shuffle=False, drop_remainder=False)
+            .prefetch(2)
+        )
+
+    whole = batch_rows(pipe().iter_batches(workers=1, executor="thread"))
+    stats_t: dict = {}
+    threaded = batch_rows(
+        pipe().iter_batches(workers=2, executor="thread", stats=stats_t)
+    )
+    stats_p: dict = {}
+    processed = batch_rows(
+        pipe().iter_batches(workers=2, executor="process", stats=stats_p)
+    )
+    assert threaded == whole
+    assert processed == whole
+    assert stats_t["executor"] == "thread"
+    assert stats_p["executor"] == "process"
+
+
+# ---------------------------------------------------------------------------
+# executor selection and fallback
+# ---------------------------------------------------------------------------
+
+
+def test_make_executor_selection_and_fallback(tmp_path, monkeypatch):
+    d = write_shards(tmp_path, EDGE_RECORDS)
+    shards = ing.list_shards([d])
+    plain = optimized_program(chain(d))
+    dedup_ds = Dataset.from_json_dirs([d], FIELDS).drop_duplicates(FIELDS)
+    dedup = optimized_program(dedup_ds)
+
+    monkeypatch.delenv("REPRO_EXECUTOR", raising=False)
+    picks = {
+        "default-1": EX.make_executor(shards, plain, workers=1),
+        "default-4": EX.make_executor(shards, plain, workers=4),
+        "forced-thread": EX.make_executor(shards, plain, workers=4, executor="thread"),
+        "dedup-falls-back": EX.make_executor(shards, dedup, workers=4),
+    }
+    try:
+        assert picks["default-1"].name == "thread"
+        assert picks["default-4"].name == "process"
+        assert picks["forced-thread"].name == "thread"
+        assert picks["dedup-falls-back"].name == "thread"
+    finally:
+        for ex in picks.values():
+            ex.stop()
+
+    monkeypatch.setenv("REPRO_EXECUTOR", "thread")
+    ex = EX.make_executor(shards, plain, workers=4)
+    try:
+        assert ex.name == "thread"
+    finally:
+        ex.stop()
+
+    monkeypatch.setenv("REPRO_EXECUTOR", "bogus")
+    with pytest.raises(ValueError):
+        EX.make_executor(shards, plain, workers=2)
+
+    with pytest.raises(EX.UnsupportedPlanError):
+        EX.ProcessShardExecutor(shards, dedup, workers=2)

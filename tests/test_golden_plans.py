@@ -1,0 +1,108 @@
+"""Golden-plan regression tests.
+
+The optimizer's rewrites (stage merge, dropna pullback, source projection)
+are *exact* — they must never change what a plan computes — so their
+output shape is part of the API. These snapshots pin the optimized plan
+for four representative chains; an optimizer refactor that changes any of
+them must update the snapshot deliberately, not silently.
+
+The plan fingerprint (:func:`repro.core.plan.plan_fingerprint`) is pinned
+structurally (stable across rebuilds, sensitive to every parameter) rather
+than by literal value, since op fingerprints hash LUT/pattern contents.
+"""
+
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.p3sapp import case_study_stages
+from repro.core.stages import ConvertToLower, RemoveShortWords
+from repro.data.batching import TokenSpec
+from repro.data.tokenizer import WordTokenizer
+
+
+def optimized_lines(ds: Dataset) -> list[str]:
+    return [n.describe() for n in ds.optimized_plan()]
+
+
+def test_golden_stage_and_filter_merge():
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .apply(ConvertToLower("title"))
+        .apply(RemoveShortWords("title", threshold=2))
+        .dropna(["title"])
+        .dropna(["abstract"])
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "ApplyStages(ConvertToLower[title->title], RemoveShortWords[title->title])",
+        "DropNA(['title', 'abstract'])",
+    ]
+
+
+def test_golden_dropna_pullback():
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .apply(ConvertToLower("abstract"))
+        .dropna(["title"])
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "DropNA(['title'])",
+        "ApplyStages(ConvertToLower[abstract->abstract])",
+    ]
+
+
+def test_golden_source_projection():
+    tok = WordTokenizer(["w"])
+    ds = (
+        Dataset.from_json_dirs(["/x"], ("title", "abstract", "venue"))
+        .dropna(["abstract"])
+        .apply(ConvertToLower("abstract"))
+        .tokenize(tok, (TokenSpec("abstract", 16),))
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['abstract'])",
+        "DropNA(['abstract'])",
+        "ApplyStages(ConvertToLower[abstract->abstract])",
+        "Tokenize(['abstract->abstract_tokens'])",
+    ]
+
+
+def test_golden_canonical_p3sapp_chain():
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .dropna()
+        .drop_duplicates()
+        .apply(*case_study_stages())
+        .dropna()
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "DropNA(['title', 'abstract'])",
+        "DropDuplicates(['title', 'abstract'])",
+        "ApplyStages(ConvertToLower[abstract->abstract], "
+        "RemoveHTMLTags[abstract->abstract], "
+        "RemoveUnwantedCharacters[abstract->abstract], "
+        "StopWordsRemover[abstract->abstract], "
+        "RemoveShortWords[abstract->abstract], "
+        "ConvertToLower[title->title], RemoveHTMLTags[title->title], "
+        "RemoveUnwantedCharacters[title->title], "
+        "RemoveShortWords[title->title])",
+        "DropNA(['title', 'abstract'])",
+    ]
+
+
+def test_plan_fingerprint_stable_and_parameter_sensitive():
+    def build(threshold=1, dirs=("/x",)):
+        return (
+            Dataset.from_json_dirs(list(dirs))
+            .dropna()
+            .apply(RemoveShortWords("title", threshold=threshold))
+        )
+
+    a = P.plan_fingerprint(build().plan, build().schema)
+    b = P.plan_fingerprint(build().plan, build().schema)
+    assert a == b  # stable across independent rebuilds of the same chain
+    assert a != P.plan_fingerprint(build(threshold=2).plan, build().schema)
+    # the optimized fingerprint sees through no-op plan re-orderings but
+    # not through real structural change
+    assert a != P.plan_fingerprint(build(dirs=("/y",)).plan, build().schema)

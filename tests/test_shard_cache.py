@@ -1,0 +1,302 @@
+"""Plan-fingerprint shard cache: correctness under change and corruption.
+
+The cache key is (shard bytes digest, column lineage fingerprint), so:
+any op parameter change must change the fingerprint (never serve stale
+results); an unchanged plan must hit without recomputing (the paper's
+``persist()`` cost argument); a partially-changed plan must recompute only
+the affected columns; and a corrupted cache file must degrade to a miss,
+never an error.
+"""
+
+import json
+
+import pytest
+
+from repro.core import executor as EX
+from repro.core import ingest as ing
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.frame import ColumnarFrame
+from repro.core.p3sapp import case_study_stages
+from repro.core.stages import RemoveShortWords, StopWordsRemover
+
+FIELDS = ("title", "abstract")
+RECORDS = [
+    {"title": f"Title <b>{i}</b> Words", "abstract": f"The abstract (no {i}) isn't short."}
+    for i in range(12)
+]
+
+
+@pytest.fixture
+def corpus(tmp_path):
+    d = tmp_path / "corpus"
+    d.mkdir()
+    for i in range(3):
+        with open(d / f"s{i}.jsonl", "w", encoding="utf-8") as fh:
+            for r in RECORDS[i::3]:
+                fh.write(json.dumps(r) + "\n")
+    return d
+
+
+def program_for(ds):
+    frame_nodes, _ = P.split_plan(ds.plan)
+    return EX.compile_shard_program(
+        P.optimize_plan(frame_nodes, ds.schema), optimize=True
+    )
+
+
+def run_thread(corpus, program, cache_dir, workers=2):
+    ex = EX.ThreadShardExecutor(
+        ing.list_shards([corpus]), program, workers=workers, cache_dir=cache_dir
+    )
+    frames = [r.frame for r in ex]
+    ex.stop()
+    records = ColumnarFrame.concat(frames).to_records()
+    return sorted(tuple(sorted(r.items())) for r in records), ex
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+
+def chain_with(stage):
+    return Dataset.from_json_dirs(["/x"], FIELDS).dropna(FIELDS).apply(stage)
+
+
+def test_fingerprint_changes_with_any_op_param():
+    base = program_for(chain_with(RemoveShortWords("title", threshold=1)))
+    fp = EX.column_fingerprints(base)
+    assert fp is not None and set(fp) >= {"title", "abstract"}
+
+    rethreshold = program_for(chain_with(RemoveShortWords("title", threshold=2)))
+    assert EX.column_fingerprints(rethreshold)["title"] != fp["title"]
+    # the untouched column keeps its fingerprint → stays cached
+    assert EX.column_fingerprints(rethreshold)["abstract"] == fp["abstract"]
+
+    restopped = program_for(chain_with(StopWordsRemover("title", stopwords=("the",))))
+    assert EX.column_fingerprints(restopped)["title"] != fp["title"]
+
+    # a row filter change invalidates every column (it changes the row set)
+    unfiltered = program_for(
+        Dataset.from_json_dirs(["/x"], FIELDS).apply(
+            RemoveShortWords("title", threshold=1)
+        )
+    )
+    ufp = EX.column_fingerprints(unfiltered)
+    assert ufp["title"] != fp["title"] and ufp["abstract"] != fp["abstract"]
+
+
+def test_fingerprints_disabled_for_dedup_plans():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS).drop_duplicates(FIELDS)
+    assert EX.column_fingerprints(program_for(ds)) is None
+
+
+# ---------------------------------------------------------------------------
+# hit/miss behavior
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_recompute(corpus, tmp_path, monkeypatch):
+    cache_dir = tmp_path / "cache"
+    ds = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS).apply(
+        *case_study_stages()
+    )
+    program = program_for(ds)
+
+    cold, ex_cold = run_thread(corpus, program, cache_dir, workers=1)
+    assert ex_cold.cache_hits == 0
+    assert ex_cold.cache_misses == 6  # 3 shards x 2 columns
+
+    # Count actual op-chain executions: a warm cache must not run any.
+    calls = []
+    real = EX.B.apply_ops
+
+    def counting(buf, ops):
+        calls.append(ops)
+        return real(buf, ops)
+
+    monkeypatch.setattr(EX.B, "apply_ops", counting)
+    warm, ex_warm = run_thread(corpus, program, cache_dir, workers=1)
+    assert warm == cold
+    assert ex_warm.cache_hits == 6 and ex_warm.cache_misses == 0
+    assert calls == []  # hit path never ran a single byte op
+
+
+def test_partial_plan_change_recomputes_only_affected_column(corpus, tmp_path):
+    cache_dir = tmp_path / "cache"
+    base = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS)
+    v1 = program_for(base.apply(*case_study_stages()))
+    run_thread(corpus, v1, cache_dir)
+
+    from repro.core.stages import abstract_stages, title_stages
+
+    changed = program_for(
+        base.apply(*(abstract_stages(threshold=3) + title_stages()))
+    )
+    _, ex = run_thread(corpus, changed, cache_dir)
+    # abstract's threshold changed → misses; title's chain unchanged → hits
+    assert ex.cache_hits == 3 and ex.cache_misses == 3
+
+
+def test_corrupted_cache_falls_back_to_recompute(corpus, tmp_path):
+    cache_dir = tmp_path / "cache"
+    ds = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS).apply(
+        *case_study_stages()
+    )
+    program = program_for(ds)
+    cold, _ = run_thread(corpus, program, cache_dir)
+
+    entries = sorted(cache_dir.glob("*.npy"))
+    assert entries
+    for p in entries[::2]:
+        p.write_bytes(b"this is not a numpy file")
+    entries[1].write_bytes(b"")  # truncated write
+
+    again, ex = run_thread(corpus, program, cache_dir)
+    assert again == cold  # corruption degrades to recompute, not to a crash
+    assert ex.cache_misses > 0
+    # corrupted entries were rewritten: a third run is fully warm
+    final, ex3 = run_thread(corpus, program, cache_dir)
+    assert final == cold and ex3.cache_misses == 0
+
+
+def test_process_executor_shares_the_same_cache(corpus, tmp_path):
+    cache_dir = tmp_path / "cache"
+    ds = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS).apply(
+        *case_study_stages()
+    )
+    program = program_for(ds)
+    cold, _ = run_thread(corpus, program, cache_dir, workers=1)
+
+    ex = EX.ProcessShardExecutor(
+        ing.list_shards([corpus]), program, workers=2, cache_dir=cache_dir
+    )
+    frames = [r.frame for r in ex]
+    ex.stop()
+    got = sorted(
+        tuple(sorted(r.items())) for r in ColumnarFrame.concat(frames).to_records()
+    )
+    assert got == cold
+    assert ex.cache_hits == 6 and ex.cache_misses == 0
+
+
+def test_two_clean_steps_on_same_column_never_alias(corpus, tmp_path):
+    """Regression: each clean step keys the cache with its *own* lineage
+    fingerprint. With final-only fingerprints, step 2 would hit the entry
+    step 1 just stored and silently skip its ops."""
+    from repro.core.stages import ConvertToLower, RemoveHTMLTags
+
+    cache_dir = tmp_path / "cache"
+    ds = (
+        Dataset.from_json_dirs([corpus], FIELDS)
+        .apply(ConvertToLower("title"))
+        .select(["title"])  # keeps the two ApplyStages from merging
+        .apply(RemoveHTMLTags("title"))
+    )
+    program = program_for(ds)
+    assert [k for k, _ in program.steps] == ["clean", "select", "clean"]
+    fps = EX.step_column_fingerprints(program)
+    step_ids = sorted(fps)
+    assert fps[step_ids[0]]["title"] != fps[step_ids[1]]["title"]
+
+    want, _ = run_thread(corpus, program, cache_dir=None)
+    cold, _ = run_thread(corpus, program, cache_dir)
+    warm, ex = run_thread(corpus, program, cache_dir)
+    assert cold == want and warm == want
+    assert ex.cache_misses == 0
+
+
+def test_process_executor_preserves_non_string_values(tmp_path):
+    """Regression: non-string JSON values (ints, …) must survive the
+    shared-memory round trip with their types, as they do in the thread
+    and whole-frame executors."""
+    d = tmp_path / "corpus"
+    d.mkdir()
+    recs = [{"title": f"Paper {i}", "year": 1990 + i} for i in range(6)]
+    recs.append({"title": "untyped", "year": None})
+    with open(d / "s0.jsonl", "w") as fh:
+        for r in recs:
+            fh.write(json.dumps(r) + "\n")
+    ds = Dataset.from_json_dirs([d], ("title", "year"))
+    program = program_for(ds)
+    shards = ing.list_shards([d])
+
+    def typed_records(ex):
+        frames = [r.frame for r in ex]
+        ex.stop()
+        return sorted(
+            (r["title"], r["year"], type(r["year"]).__name__)
+            for r in ColumnarFrame.concat(frames).to_records()
+        )
+
+    threaded = typed_records(EX.ThreadShardExecutor(shards, program, workers=2))
+    processed = typed_records(EX.ProcessShardExecutor(shards, program, workers=2))
+    assert processed == threaded
+    assert ("Paper 0", 1990, "int") in processed
+
+
+def test_lambda_predicate_is_uncacheable_not_wrong(corpus, tmp_path):
+    """A predicate we cannot fingerprint (lambda) must disable caching for
+    its column — never collide into another lambda's entry."""
+    from repro.core import bytesops as B
+
+    with pytest.raises(B.UnfingerprintableOpError):
+        B.ops_fingerprint([B.wordpred_op(lambda v, ln: ln <= 1, False)])
+
+    op = B.wordpred_op(lambda v, ln: ln <= 2, needs_hashes=False)
+    program = EX.ShardProgram(
+        FIELDS, (("clean", (("title", "title", (op,)),)),)
+    )
+    fps = EX.step_column_fingerprints(program)
+    assert "title" not in fps[0]  # poisoned column: no cache key
+
+    cache_dir = tmp_path / "cache"
+    first, _ = run_thread(corpus, program, cache_dir)
+    second, ex = run_thread(corpus, program, cache_dir)
+    assert first == second
+    assert ex.cache_hits == 0  # recomputed, not served from a colliding key
+
+
+def test_options_after_terminal_reuse_memoized_frame(corpus):
+    """Regression: .workers()/.cache() applied after a terminal must reuse
+    the already-materialized frame instead of re-ingesting/cleaning."""
+    ds = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS).apply(
+        *case_study_stages()
+    )
+    first = ds.collect()
+    reused = ds.workers(2).cache(False).collect()
+    assert reused is first  # same memoized object, no re-execution
+
+
+# ---------------------------------------------------------------------------
+# Dataset-level .cache() verb
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_cache_verb_end_to_end(corpus, tmp_path):
+    from repro.data.batching import seq2seq_specs
+    from repro.data.tokenizer import WordTokenizer
+
+    cache_dir = tmp_path / "ds_cache"
+    tok = WordTokenizer.fit(r["abstract"] for r in RECORDS)
+
+    def pipe():
+        return (
+            Dataset.from_json_dirs([corpus], FIELDS)
+            .dropna(FIELDS)
+            .apply(*case_study_stages())
+            .cache(cache_dir)
+            .workers(2)
+            .tokenize(tok, seq2seq_specs(max_abstract_len=16, max_title_len=8))
+            .batch(4, shuffle=False)
+            .prefetch(2)
+        )
+
+    stats1: dict = {}
+    batches1 = list(pipe().iter_batches(stats=stats1))
+    stats2: dict = {}
+    batches2 = list(pipe().iter_batches(stats=stats2))
+    assert stats1["cache_hits"] == 0 and stats1["cache_misses"] == 6
+    assert stats2["cache_hits"] == 6 and stats2["cache_misses"] == 0
+    assert len(batches1) == len(batches2)
