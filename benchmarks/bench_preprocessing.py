@@ -12,7 +12,14 @@ the plan-fingerprint shard cache; a second identical run then reports its
 hit rate (the Spark ``persist()`` analogue). The cache persists across
 invocations by design — compare ``--workers`` values *without* ``--cache``
 (equal cold state), and use ``--cache`` for the cold/warm protocol; each
-row's ``cache_hit_pct`` shows which state it measured."""
+row's ``cache_hit_pct`` shows which state it measured.
+
+``--tokenize`` measures the token-space tail of the same plan: vocabulary
+fitting (per-shard counts merged on the driver) plus streaming
+tokenization and batch assembly, fixed-``max_len`` vs length-bucketed.
+Rows report tokens/sec (payload tokens delivered per wall second), the
+pad-token fraction of the encoder column under each assembly, and the
+token-cache hit rate (run twice with ``--cache`` for cold/warm)."""
 
 from __future__ import annotations
 
@@ -86,6 +93,90 @@ def run_scaling(
     return rows
 
 
+def run_tokenize(
+    quick: bool = False,
+    workers: int = 2,
+    cache: bool = False,
+    executor: str | None = None,
+) -> list[dict]:
+    from repro.core.dataset import Dataset
+    from repro.data.batching import (
+        effective_lengths,
+        pad_token_fraction,
+        seq2seq_specs,
+    )
+
+    rows = []
+    specs = seq2seq_specs(max_abstract_len=128, max_title_len=24)
+    for ds_id, d, gb in dataset_dirs(quick):
+
+        def chain():
+            ds = (
+                Dataset.from_json_dirs([d])
+                .dropna()
+                .apply(*(abstract_stages() + title_stages()))
+                .dropna()
+            )
+            return ds.cache(CACHE_DIR / "tokens") if cache else ds
+
+        t0 = time.perf_counter()
+        fit_stats: dict = {}
+        tok = chain().fit_vocab(
+            vocab_size=8000, workers=workers, executor=executor, stats=fit_stats
+        )
+        fit_wall = time.perf_counter() - t0
+
+        for mode in ("fixed", "bucketed"):
+            pipe = chain().tokenize(tok, specs)
+            if mode == "bucketed":
+                pipe = pipe.batched(
+                    32, shuffle=False, drop_remainder=False,
+                    bucket_by="encoder_tokens",
+                )
+            else:
+                pipe = pipe.batch(32, shuffle=False, drop_remainder=False)
+            stats: dict = {}
+            t0 = time.perf_counter()
+            batches = list(
+                pipe.prefetch(2).iter_batches(
+                    workers=workers, executor=executor, stats=stats
+                )
+            )
+            wall = time.perf_counter() - t0
+            payload_tokens = sum(
+                int(effective_lengths(b[k]).sum()) for b in batches for k in b
+            )
+            lookups = stats.get("token_cache_hits", 0) + stats.get(
+                "token_cache_misses", 0
+            )
+            rows.append({
+                "name": "tokenize",
+                "dataset_id": ds_id,
+                "paper_gb": gb,
+                "mode": mode,
+                "workers": workers,
+                "executor": stats.get("executor"),
+                "cache": cache,
+                "fit_vocab_s": round(fit_wall, 4),
+                "wall_s": round(wall, 4),
+                "batches": len(batches),
+                "payload_tokens": payload_tokens,
+                "tokens_per_s": round(payload_tokens / wall, 1) if wall else 0.0,
+                "pad_frac": round(
+                    pad_token_fraction(batches, "encoder_tokens"), 4
+                ),
+                "token_cache_hits": stats.get("token_cache_hits", 0),
+                "token_cache_misses": stats.get("token_cache_misses", 0),
+                "token_cache_hit_pct": (
+                    round(100 * stats.get("token_cache_hits", 0) / lookups, 2)
+                    if lookups
+                    else 0.0
+                ),
+                "us_per_call": round(wall * 1e6, 1),
+            })
+    return rows
+
+
 def run(quick: bool = False) -> list[dict]:
     rows = []
     for ds_id, d, gb in dataset_dirs(quick):
@@ -117,8 +208,11 @@ def main(
     workers: int | None = None,
     cache: bool = False,
     executor: str | None = None,
+    tokenize: bool = False,
 ) -> None:
-    if workers is not None:
+    if tokenize:
+        emit("tokenize", run_tokenize(quick, workers or 2, cache, executor))
+    elif workers is not None:
         emit("executor_scaling", run_scaling(quick, workers, cache, executor))
     else:
         emit("table3_preprocessing", run(quick))
@@ -134,5 +228,8 @@ if __name__ == "__main__":
     ap.add_argument("--cache", action="store_true",
                     help="enable the plan-fingerprint shard cache")
     ap.add_argument("--executor", choices=["thread", "process"], default=None)
+    ap.add_argument("--tokenize", action="store_true",
+                    help="token-space axis: fit_vocab + streaming "
+                         "tokenization, fixed vs bucketed assembly")
     args = ap.parse_args()
-    main(args.quick, args.workers, args.cache, args.executor)
+    main(args.quick, args.workers, args.cache, args.executor, args.tokenize)

@@ -21,9 +21,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_smoke
-from repro.core.p3sapp import run_p3sapp
+from repro.core.p3sapp import p3sapp_dataset
 from repro.data.synthetic import write_corpus
-from repro.data.tokenizer import WordTokenizer
 from repro.distributed.sharding import tree_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.lm import LM, MeshContext
@@ -41,8 +40,9 @@ def main() -> None:
 
     corpus = tempfile.mkdtemp(prefix="p3sapp_corpus_")
     write_corpus(corpus, total_bytes=2_000_000, n_files=4, seed=7)
-    records, _ = run_p3sapp([corpus], optimize=True)
-    tok = WordTokenizer.fit((r["abstract"] for r in records), vocab_size=2000)
+    ds = p3sapp_dataset([corpus])
+    records, _ = ds.execute(optimize=True)
+    tok = ds.fit_vocab(["abstract"], vocab_size=2000)
 
     cfg = get_smoke(args.arch)
     # pack abstracts into contiguous LM sequences

@@ -3,7 +3,9 @@
 Generates a small synthetic CORE-style corpus, declares the P3SAPP flow
 (ingest → pre-clean → stage chain → records) as a single declarative chain,
 prints the optimized plan, compares against the conventional approach, and
-prints the paper's headline numbers for this scale.
+prints the paper's headline numbers for this scale — then carries the same
+plan into token space: ``fit_vocab`` (shard-merged word counts) →
+``tokenize`` → length-bucketed ``batched``, all inside the planner.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,6 +14,7 @@ import tempfile
 
 from repro.core.dataset import Dataset
 from repro.core.p3sapp import case_study_stages, record_match_accuracy, run_conventional
+from repro.data.batching import pad_token_fraction, seq2seq_specs
 from repro.data.synthetic import write_corpus
 
 
@@ -47,6 +50,28 @@ def main() -> None:
     r = pa_records[0]
     print(f"  title   : {r['title'][:70]}")
     print(f"  abstract: {r['abstract'][:70]}...")
+
+    # -- token space: the same plan, continued ------------------------------
+    # fit_vocab is the Spark CountVectorizer-style fit half (per-shard
+    # Counters, merged deterministically); tokenize/batched extend the
+    # plan to int32 device-ready batches. The cleaned frame above is
+    # memoized, so none of this re-reads or re-cleans the corpus.
+    tok = ds.fit_vocab(vocab_size=4000)
+    specs = seq2seq_specs(max_abstract_len=64, max_title_len=12)
+    fixed = list(
+        ds.tokenize(tok, specs).batch(32, shuffle=False).iter_batches()
+    )
+    bucketed = list(
+        ds.tokenize(tok, specs)
+        .batched(32, shuffle=False, bucket_by="encoder_tokens")
+        .iter_batches()
+    )
+    print(f"\nvocab: {len(tok)} words, {len(bucketed)} batches")
+    f_fixed = pad_token_fraction(fixed, "encoder_tokens")
+    f_bucket = pad_token_fraction(bucketed, "encoder_tokens")
+    print(f"pad fraction fixed max_len : {100 * f_fixed:.1f}%")
+    print(f"pad fraction bucketed      : {100 * f_bucket:.1f}%")
+    print(f"encoder shapes: {sorted({b['encoder_tokens'].shape for b in bucketed})}")
 
 
 if __name__ == "__main__":

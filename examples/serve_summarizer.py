@@ -8,16 +8,10 @@ a queue of abstract-summarization requests through fixed decode slots
 """
 
 import argparse
-import tempfile
 
 import jax
 import numpy as np
 
-from repro.configs.p3sapp_summarizer import SMOKE as CFG
-from repro.core.p3sapp import run_p3sapp
-from repro.data.batching import seq2seq_arrays
-from repro.data.synthetic import write_corpus
-from repro.data.tokenizer import WordTokenizer
 from repro.models.lm import LM
 from repro.configs import get_smoke
 from repro.runtime.serve_loop import Request, serve_requests

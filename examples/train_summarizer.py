@@ -25,7 +25,6 @@ from repro.core.dataset import Dataset
 from repro.core.p3sapp import case_study_stages
 from repro.data.batching import seq2seq_specs
 from repro.data.synthetic import write_corpus
-from repro.data.tokenizer import WordTokenizer
 from repro.models.seq2seq import Seq2Seq
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.runtime.fault_tolerance import TrainController
@@ -56,16 +55,18 @@ def main() -> None:
     records, timings = clean.execute(optimize=True)
     print(f"P3SAPP preprocessing: {timings.cumulative:.2f}s, {len(records)} records")
 
-    tok = WordTokenizer.fit(
-        (r["abstract"] + " " + r["title"] for r in records), vocab_size=cfg.vocab_size
-    )
+    # Vocabulary fitting is a plan verb: per-shard word counts merged on
+    # the driver when streaming, the memoized frame here (one clean pass).
+    tok = clean.fit_vocab(vocab_size=cfg.vocab_size)
     train_ds, val_ds = clean.split(val_fraction=0.1, seed=0)
     specs = seq2seq_specs(cfg.max_abstract_len, cfg.max_title_len)
-    # ingest → dropna → apply → tokenize → batch → prefetch → device_batches:
-    # the cleaned frame is memoized, so this reuses the pass above.
+    # ingest → dropna → apply → tokenize → batched → prefetch →
+    # device_batches: the cleaned frame is memoized, so this reuses the
+    # pass above; length-bucketed assembly trims encoder padding to a
+    # small fixed shape set (one jit compile per bucket).
     loader = (
         train_ds.tokenize(tok, specs)
-        .batch(args.batch_size, shuffle=True)
+        .batched(args.batch_size, shuffle=True, bucket_by="encoder_tokens")
         .prefetch(2)
         .device_batches(epochs=None)
     )

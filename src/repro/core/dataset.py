@@ -5,14 +5,18 @@ Builder methods append logical plan nodes (:mod:`repro.core.plan`) instead
 of executing; terminal actions hand the plan to the planner, which merges
 and fuses stage chains, pushes filters/projections toward the source, and
 picks whole-frame or streaming per-shard execution. One chain covers the
-whole paper pipeline *and* the model-input path::
+whole paper pipeline *and* the model-input path — cleaning, vocabulary
+fitting, tokenization, and bucketed batch assembly all live inside the
+plan::
 
-    loader = (Dataset.from_json_dirs([corpus])
-              .dropna().drop_duplicates()
-              .apply(*case_study_stages())
-              .dropna()
-              .tokenize(tok, seq2seq_specs())
-              .batch(32, shuffle=True)
+    clean = (Dataset.from_json_dirs([corpus])
+             .dropna().drop_duplicates()
+             .apply(*case_study_stages())
+             .dropna())
+    tok = clean.fit_vocab(vocab_size=8000)       # shard-merged word counts
+    loader = (clean
+              .tokenize(tok, seq2seq_specs())    # encoded inside executors
+              .batched(32, bucket_by="encoder_tokens")  # length buckets
               .prefetch(2)
               .device_batches())
 
@@ -20,10 +24,15 @@ Terminals:
 
 * ``collect()`` / ``to_records()`` / ``execute()`` — whole-frame, with the
   paper's :class:`~repro.core.plan.StageTimings` attribution.
+* ``fit_vocab()`` — a :class:`~repro.data.tokenizer.WordTokenizer` fitted
+  via per-shard ``Counter`` aggregation in the shard executors (merged on
+  the driver; deterministic count-desc/word-asc ranking) or, when the
+  frame is already memoized, a whole-frame count — identical either way.
 * ``arrays()`` — tokenized model-input arrays.
 * ``iter_batches()`` / ``device_batches()`` — batches; with ``.prefetch()``
   in the chain and an un-materialized JSON source these stream per shard
-  over a work-stealing pool so host preprocessing overlaps device compute.
+  over a work-stealing pool — the executors emit int32 token buffers
+  directly — so host preprocessing overlaps device compute.
 
 Whole-frame results are memoized on the frame-level prefix, so fitting a
 tokenizer and then training off the same chain ingests/cleans only once.
@@ -39,16 +48,28 @@ from __future__ import annotations
 
 import os
 import time
+from collections import Counter
 from pathlib import Path
 from typing import Any, Iterator, Sequence
 
 import numpy as np
 
-from ..data.batching import TokenSpec, batches as _array_batches
+from ..data.batching import TokenSpec, batches as _array_batches, derive_buckets
+from ..data.tokenizer import WordTokenizer
 from . import plan as P
 from .async_loader import AsyncLoader
 from .frame import ColumnarFrame
 from .stages import Stage
+
+
+def _env_cache_dir() -> Path | None:
+    """``REPRO_CACHE`` turns the shard cache on by default (root from
+    ``REPRO_CACHE_DIR`` / tmp); explicit ``.cache(...)`` always wins."""
+    if os.environ.get("REPRO_CACHE", "").strip().lower() in ("1", "true", "yes", "on"):
+        from .executor import default_cache_dir
+
+        return default_cache_dir()
+    return None
 
 
 class Dataset:
@@ -150,6 +171,94 @@ class Dataset:
                 raise KeyError(f"tokenize spec reads unknown column {spec.column!r}")
         return self._derive(P.Tokenize(tokenizer, specs), [s.name for s in specs])
 
+    # -- vocabulary fitting (terminal; Spark CountVectorizer-style) --------
+    def _counts_can_stream(self) -> bool:
+        owner = self._frame_prefix_dataset()
+        if self._has_memoized_frame():
+            return False  # already materialized: count that frame
+        if not isinstance(owner._nodes[0], P.SourceJsonDirs):
+            return False
+        src_fields = set(owner._nodes[0].fields)
+        for n in owner._nodes:
+            if isinstance(n, P.Split):
+                return False  # whole-frame only
+            if isinstance(n, P.DropDuplicates) and not set(n.subset) >= src_fields:
+                return False  # partial-subset dedup is scheduling-dependent
+        return True
+
+    def fit_vocab(
+        self,
+        columns: Sequence[str] | None = None,
+        vocab_size: int = 8000,
+        *,
+        workers: int | None = None,
+        optimize: bool = True,
+        executor: str | None = None,
+        stats: dict | None = None,
+    ) -> WordTokenizer:
+        """Fit a :class:`WordTokenizer` on the cleaned text of ``columns``
+        (default: every frame column) — the fit half of the Spark
+        fit-then-transform split.
+
+        On an unmaterialized JSON source this runs as a per-shard word
+        ``Counter`` inside the shard executors (thread or process, same
+        selection rules as streaming batches) merged on the driver, so
+        fitting never makes a second driver-side pass over the corpus;
+        otherwise it counts the memoized whole frame. Both orders produce
+        the identical vocabulary: counter merge is commutative and the
+        ranking tie-break is deterministic (count desc, word asc). With
+        the shard cache enabled, per-shard counts are cached too — a
+        refit over unchanged data and plan reads no shard at all."""
+        from . import executor as EX
+        from . import ingest as ing
+
+        owner = self._frame_prefix_dataset()
+        cols = tuple(columns) if columns is not None else owner.schema
+        unknown = [c for c in cols if c not in owner.schema]
+        if unknown:
+            raise KeyError(f"unknown columns {unknown}; schema is {list(owner.schema)}")
+        counts: Counter = Counter()
+        n_workers = self._resolve_workers(workers, default=2)
+        if self._counts_can_stream():
+            frame_nodes, _ = P.split_plan(owner._nodes)
+            if optimize:
+                frame_nodes = P.optimize_plan(frame_nodes, cols)
+            program = EX.compile_shard_program(
+                frame_nodes, optimize=optimize, output_columns=cols, count_words=cols
+            )
+            exec_ = EX.make_executor(
+                ing.list_shards(frame_nodes[0].directories),
+                program,
+                workers=n_workers,
+                cache_dir=self._resolve_cache_dir(),
+                executor=executor or self._options.get("executor"),
+            )
+            try:
+                for res in exec_:
+                    if res.word_counts:
+                        counts.update(res.word_counts)
+            finally:
+                exec_.stop()
+                if stats is not None:
+                    stats["executor"] = exec_.name
+                    stats["token_cache_hits"] = (
+                        stats.get("token_cache_hits", 0) + exec_.token_cache_hits
+                    )
+                    stats["token_cache_misses"] = (
+                        stats.get("token_cache_misses", 0) + exec_.token_cache_misses
+                    )
+                    stats["timings"] = exec_.timings
+        else:
+            frame, _ = owner._materialize(
+                self._resolve_workers(workers), optimize, exact=workers is not None
+            )
+            if stats is not None:
+                stats["executor"] = "whole-frame"
+            for col in cols:
+                for t in frame[col]:
+                    counts.update((t or "").split())
+        return WordTokenizer.from_counts(counts, vocab_size)
+
     def batch(
         self,
         batch_size: int,
@@ -158,11 +267,51 @@ class Dataset:
         seed: int = 0,
         drop_remainder: bool = True,
         pad_to: int | None = None,
+        bucket_by: str | None = None,
+        buckets: Sequence[int] | None = None,
+        n_buckets: int = 4,
     ) -> "Dataset":
-        if not any(isinstance(n, P.Tokenize) for n in self._nodes):
+        """Fixed-shape batches. With ``bucket_by`` (a token output name),
+        rows are grouped by payload length into a small fixed set of
+        bucket widths — ``buckets`` explicitly, else ``n_buckets`` linear
+        steps up to that spec's ``max_len`` — and the bucketed column is
+        sliced to its bucket width, so short rows stop paying full-width
+        padding while jit still sees a bounded shape set."""
+        tok = next((n for n in self._nodes if isinstance(n, P.Tokenize)), None)
+        if tok is None:
             raise ValueError("batch() requires .tokenize(...) earlier in the chain")
-        node = P.Batch(batch_size, shuffle, seed, drop_remainder, pad_to)
+        if buckets and bucket_by is None:
+            raise ValueError(
+                "buckets=... needs bucket_by=<token output name>; without it "
+                "the batches would silently stay fixed-max_len"
+            )
+        resolved: tuple[int, ...] = ()
+        if bucket_by is not None:
+            spec = next((s for s in tok.specs if s.name == bucket_by), None)
+            if spec is None:
+                raise KeyError(
+                    f"bucket_by={bucket_by!r} is not a token output; "
+                    f"available: {[s.name for s in tok.specs]}"
+                )
+            if buckets:
+                resolved = tuple(sorted({int(b) for b in buckets}))
+                if resolved[0] < 1:
+                    raise ValueError(f"bucket widths must be >= 1, got {resolved}")
+                if resolved[-1] < spec.max_len:
+                    # The last bucket must fit any row (rows were already
+                    # truncated to max_len by encoding).
+                    resolved = resolved + (spec.max_len,)
+            else:
+                resolved = derive_buckets(spec.max_len, n_buckets)
+        node = P.Batch(
+            batch_size, shuffle, seed, drop_remainder, pad_to, bucket_by, resolved
+        )
         return self._derive(node, self.schema)
+
+    def batched(self, batch_size: int, **kwargs: Any) -> "Dataset":
+        """Alias of :meth:`batch` — the bucketed-assembly verb
+        (``.batched(32, bucket_by="encoder_tokens")``)."""
+        return self.batch(batch_size, **kwargs)
 
     def prefetch(self, prefetch: int = 2, *, sharding: Any = None) -> "Dataset":
         """Declare streaming intent: terminal batch iteration runs per-shard
@@ -201,6 +350,11 @@ class Dataset:
             return self._with_options(cache_dir=None)
         root = default_cache_dir() if directory is True else Path(directory)
         return self._with_options(cache_dir=root)
+
+    def _resolve_cache_dir(self) -> Path | None:
+        if "cache_dir" in self._options:
+            return self._options["cache_dir"]  # .cache(False) stores None: off
+        return _env_cache_dir()
 
     def _resolve_workers(self, explicit: int | None, default: int = 1) -> int:
         if explicit is not None:
@@ -309,17 +463,23 @@ class Dataset:
             raise ValueError("no .batch(...) in the plan")
         return node
 
-    def _streaming(self) -> bool:
-        if not any(isinstance(n, P.Prefetch) for n in self._nodes):
-            return False
-        # Already materialized (possibly on an options-hop ancestor sharing
-        # the same frame prefix) — reuse the frame, don't re-read shards.
+    def _has_memoized_frame(self) -> bool:
+        """True when this chain's frame prefix is already materialized —
+        possibly on an options-hop ancestor sharing the same prefix."""
         owner = self._frame_prefix_dataset()
         ds: Dataset | None = owner
         while ds is not None and len(ds._nodes) == len(owner._nodes):
             if ds._frame_cache:
-                return False
+                return True
             ds = ds._parent
+        return False
+
+    def _streaming(self) -> bool:
+        if not any(isinstance(n, P.Prefetch) for n in self._nodes):
+            return False
+        # Already materialized — reuse the frame, don't re-read shards.
+        if self._has_memoized_frame():
+            return False
         return isinstance(self._nodes[0], P.SourceJsonDirs) and not any(
             isinstance(n, P.Split) for n in self._nodes
         )
@@ -347,7 +507,8 @@ class Dataset:
             self._resolve_workers(workers), optimize, exact=workers is not None
         )
         t = P.StageTimings(**{k: getattr(t, k) for k in
-                              ("ingestion", "pre_cleaning", "cleaning", "post_cleaning")})
+                              ("ingestion", "pre_cleaning", "cleaning",
+                               "post_cleaning", "tokenize")})
         t0 = time.perf_counter()
         records = frame.to_records()
         t.post_cleaning += time.perf_counter() - t0
@@ -395,7 +556,7 @@ class Dataset:
                 shuffle_buffer=shuffle_buffer,
                 final_schema=self._needed_columns(),
                 executor=executor or self._options.get("executor"),
-                cache_dir=self._options.get("cache_dir"),
+                cache_dir=self._resolve_cache_dir(),
                 stats=stats,
             )
             return
@@ -410,6 +571,8 @@ class Dataset:
                 seed=batch.seed + epoch,
                 drop_remainder=batch.drop_remainder,
                 pad_to=batch.pad_to,
+                bucket_by=batch.bucket_by,
+                buckets=batch.buckets,
             ):
                 produced += 1
                 yield b

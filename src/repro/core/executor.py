@@ -26,6 +26,14 @@ This module supplies both behind the planner:
   fingerprint)``. Re-running an unchanged plan skips cleaning entirely;
   changing one column's ops recomputes only that column (other columns
   keep hitting). Corrupted entries are treated as misses, never errors.
+* **Token space** — a program may carry a :class:`TokenPlan` (encode text
+  columns to int32 token arrays inside the worker) and/or ``count_words``
+  (per-shard word ``Counter`` for driver-merged vocabulary fitting, the
+  Spark ``CountVectorizer`` fit half). Token arrays and word counts cache
+  under their own keys — ``(shard digest, column lineage fingerprint,
+  token-spec params, vocab fingerprint)`` — with invalidation independent
+  of the cleaned-text entries, and a shard whose token products are fully
+  cached skips parsing and cleaning altogether.
 
 Executor selection honors ``REPRO_EXECUTOR`` (``thread`` | ``process``)
 and the cache root honors ``REPRO_CACHE_DIR``.
@@ -34,6 +42,7 @@ and the cache root honors ``REPRO_CACHE_DIR``.
 from __future__ import annotations
 
 import hashlib
+import json
 import multiprocessing as mp
 import os
 import tempfile
@@ -41,6 +50,7 @@ import threading
 import time
 import traceback
 import dataclasses
+from collections import Counter
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Iterator, Sequence
@@ -49,6 +59,7 @@ import numpy as np
 
 from . import bytesops as B
 from . import ingest as ing
+from ..data.batching import TokenSpec, encode_rows
 from .async_loader import ShardPool
 from .frame import ColumnarFrame
 from .pipeline import ColumnPlan
@@ -63,13 +74,28 @@ Step = tuple[str, Any]
 
 
 @dataclass(frozen=True)
+class TokenPlan:
+    """Token-space tail of a shard program: encode ``specs`` against a
+    fixed word-index map. Plain dict + specs, so the plan pickles into
+    worker processes like every other program part."""
+
+    specs: tuple[TokenSpec, ...]
+    stoi: dict[str, int]
+    vocab_fp: str
+
+
+@dataclass(frozen=True)
 class ShardProgram:
     """Per-shard physical program: parse ``fields``, run ``steps``, emit
-    ``output_columns`` (empty tuple = every live column)."""
+    ``output_columns`` (empty tuple = every live column). ``tokens``
+    appends token encoding; ``count_words`` appends per-shard word
+    counting (vocabulary fitting)."""
 
     fields: tuple[str, ...]
     steps: tuple[Step, ...]
     output_columns: tuple[str, ...] = ()
+    tokens: TokenPlan | None = None
+    count_words: tuple[str, ...] = ()
 
     @property
     def has_dedup(self) -> bool:
@@ -85,6 +111,8 @@ def compile_shard_program(
     *,
     optimize: bool = True,
     output_columns: Sequence[str] = (),
+    tokens: TokenPlan | None = None,
+    count_words: Sequence[str] = (),
 ) -> ShardProgram:
     """Compile an (optimized) frame-level plan into a :class:`ShardProgram`.
 
@@ -110,7 +138,13 @@ def compile_shard_program(
             steps.append(("clean", tuple((i, o, tuple(ops)) for i, o, ops in plans)))
         else:
             raise UnsupportedPlanError(f"not shard-executable: {node.describe()}")
-    return ShardProgram(tuple(src.fields), tuple(steps), tuple(output_columns))
+    return ShardProgram(
+        tuple(src.fields),
+        tuple(steps),
+        tuple(output_columns),
+        tokens=tokens,
+        count_words=tuple(count_words),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +234,55 @@ def column_fingerprints(program: ShardProgram) -> dict[str, str] | None:
     return None if walked is None else walked[1]
 
 
+def token_fingerprints(program: ShardProgram) -> dict[str, str] | None:
+    """Cache-key fingerprint per token output: the source column's final
+    lineage fingerprint (so any upstream op or filter change invalidates),
+    the spec's own parameters (so changing one ``TokenSpec`` invalidates
+    only that array), and the vocabulary fingerprint (so a refit
+    invalidates token entries without touching cleaned-text entries).
+    Missing entries mean that output is uncacheable; None disables token
+    caching for the whole program (dedup / no token plan)."""
+    if program.tokens is None:
+        return None
+    walked = _lineage_fingerprints(program)
+    if walked is None:
+        return None
+    final = walked[1]
+    out: dict[str, str] = {}
+    for spec in program.tokens.specs:
+        base = final.get(spec.column)
+        if base is None:
+            continue
+        sig = (
+            f"{base}|tok:{spec.column}->{spec.name}"
+            f":{spec.max_len}:{spec.add_start_end}"
+            f"|vocab:{program.tokens.vocab_fp}"
+        )
+        out[spec.name] = hashlib.blake2b(sig.encode(), digest_size=16).hexdigest()
+    return out
+
+
+def count_fingerprint(program: ShardProgram) -> str | None:
+    """Cache-key fingerprint for a shard's word counts: the final lineage
+    fingerprints of every counted column (the counts are a pure function
+    of those buffers). None when counting is off or any column is
+    uncacheable."""
+    if not program.count_words:
+        return None
+    walked = _lineage_fingerprints(program)
+    if walked is None:
+        return None
+    final = walked[1]
+    parts = []
+    for c in program.count_words:
+        fp = final.get(c)
+        if fp is None:
+            return None
+        parts.append(f"{c}={fp}")
+    sig = "counts|" + "|".join(parts)
+    return hashlib.blake2b(sig.encode(), digest_size=16).hexdigest()
+
+
 # ---------------------------------------------------------------------------
 # On-disk shard cache (the Spark persist() analogue)
 # ---------------------------------------------------------------------------
@@ -213,11 +296,16 @@ def default_cache_dir() -> Path:
 
 
 class ShardCache:
-    """Content-addressed store of cleaned column buffers.
+    """Content-addressed store of cleaned column buffers, token arrays,
+    and per-shard word counts.
 
     One ``.npy`` file per (shard digest, column, lineage fingerprint).
     Writes are atomic (tmp + rename); reads treat any malformed entry as a
-    miss and delete it, so a corrupted cache degrades to recompute.
+    miss and delete it, so a corrupted cache degrades to recompute. Entry
+    kinds never alias: text entries are 1-D uint8 flat buffers, token
+    entries are 2-D int32 arrays, counts are JSON-encoded uint8 — and the
+    loaders validate shape/dtype, so a key collision across kinds reads as
+    a miss rather than garbage.
     """
 
     def __init__(self, root: str | Path | None = None):
@@ -250,6 +338,49 @@ class ShardCache:
                 pass
             return None
 
+    def contains(self, key: str) -> bool:
+        """Existence probe (no validation) — used for cheap driver-side
+        fast-path checks; loaders still validate on read."""
+        return self._path(key).exists()
+
+    def load_tokens(self, key: str, max_len: int) -> np.ndarray | None:
+        """Load a token-array entry ((rows, max_len) int32); corrupt or
+        wrong-shape entries degrade to a miss."""
+        path = self._path(key)
+        try:
+            arr = np.load(path, allow_pickle=False)
+            if arr.dtype != np.int32 or arr.ndim != 2 or arr.shape[1] != max_len:
+                raise ValueError("wrong token cache payload shape")
+            return arr
+        except FileNotFoundError:
+            return None
+        except Exception:
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+
+    def load_counts(self, key: str) -> Counter | None:
+        buf = self.load(key)
+        if buf is None:
+            return None
+        try:
+            return Counter(json.loads(buf.tobytes().decode("utf-8")))
+        except Exception:
+            try:
+                self._path(key).unlink()
+            except OSError:
+                pass
+            return None
+
+    def store_counts(self, key: str, counts: Counter) -> None:
+        try:
+            data = json.dumps(dict(counts), ensure_ascii=False).encode("utf-8")
+        except (TypeError, ValueError, UnicodeEncodeError):
+            return  # unserializable corner (lone surrogates): skip caching
+        self.store(key, np.frombuffer(data, dtype=np.uint8))
+
     def store(self, key: str, buf: np.ndarray) -> None:
         path = self._path(key)
         try:
@@ -274,17 +405,23 @@ class ShardCache:
 class ShardResult:
     """One processed shard: the cleaned frame plus execution accounting.
 
-    ``payload`` holds the executor's ``postprocess(frame)`` output (e.g.
-    tokenized arrays) when a postprocess hook was installed."""
+    For token-space programs ``tokens`` holds the int32 arrays (one per
+    ``TokenSpec``) and ``word_counts`` the shard's word ``Counter`` — the
+    frame may then be empty (the process executor ships only token
+    buffers, and a fully token-cached shard skips parsing entirely)."""
 
     frame: ColumnarFrame
     parse_s: float = 0.0
     pre_clean_s: float = 0.0
     clean_s: float = 0.0
     post_clean_s: float = 0.0
+    tokenize_s: float = 0.0
     cache_hits: int = 0
     cache_misses: int = 0
-    payload: Any = None
+    token_cache_hits: int = 0
+    token_cache_misses: int = 0
+    tokens: dict = dataclasses.field(default_factory=dict)
+    word_counts: Counter | None = None
     # Flat buffers not yet folded into ``frame`` (materialize=False only).
     flat: dict = dataclasses.field(default_factory=dict)
 
@@ -372,6 +509,91 @@ def _run_clean_step(
             cache.store(key, out)
 
 
+def _cached_product_keys(
+    program: ShardProgram,
+    cache: ShardCache | None,
+    token_fps: dict[str, str] | None,
+    count_fp: str | None,
+    digest: str | None,
+) -> list[str] | None:
+    """Cache keys of every token-space product the program emits, or None
+    when the program/cache cannot serve a shard from cache at all."""
+    if cache is None or digest is None:
+        return None
+    if program.tokens is None and not program.count_words:
+        return None
+    keys: list[str] = []
+    if program.tokens is not None:
+        if not token_fps or set(token_fps) != {s.name for s in program.tokens.specs}:
+            return None
+        keys += [
+            cache.key(digest, spec.name, token_fps[spec.name])
+            for spec in program.tokens.specs
+        ]
+    if program.count_words:
+        if count_fp is None:
+            return None
+        keys.append(cache.key(digest, "__word_counts__", count_fp))
+    return keys
+
+
+def products_fully_cached(
+    program: ShardProgram,
+    cache: ShardCache | None,
+    token_fps: dict[str, str] | None,
+    count_fp: str | None,
+    digest: str,
+) -> bool:
+    """Cheap existence probe for the full-shard fast path (the process
+    executor's feeder uses it to skip the shared-memory copy entirely)."""
+    keys = _cached_product_keys(program, cache, token_fps, count_fp, digest)
+    return keys is not None and all(cache.contains(k) for k in keys)
+
+
+def _load_cached_products(
+    program: ShardProgram,
+    cache: ShardCache | None,
+    token_fps: dict[str, str] | None,
+    count_fp: str | None,
+    digest: str | None,
+) -> ShardResult | None:
+    """Serve a shard entirely from the token-space cache: when every
+    product the program emits (all token arrays, the word counts) is
+    cached under the current fingerprints, the shard needs no parse, no
+    cleaning, and no encode. None → run the program normally."""
+    if cache is None or digest is None:
+        return None
+    if program.tokens is None and not program.count_words:
+        return None
+    tokens: dict[str, np.ndarray] = {}
+    hits = 0
+    n: int | None = None
+    if program.tokens is not None:
+        if not token_fps or set(token_fps) != {s.name for s in program.tokens.specs}:
+            return None
+        for spec in program.tokens.specs:
+            key = cache.key(digest, spec.name, token_fps[spec.name])
+            arr = cache.load_tokens(key, spec.max_len)
+            if arr is None or (n is not None and len(arr) != n):
+                return None  # partial/inconsistent: recompute the shard
+            n = len(arr)
+            tokens[spec.name] = arr
+        hits += len(tokens)
+    counts: Counter | None = None
+    if program.count_words:
+        if count_fp is None:
+            return None
+        counts = cache.load_counts(cache.key(digest, "__word_counts__", count_fp))
+        if counts is None:
+            return None
+        hits += 1
+    result = ShardResult(ColumnarFrame({}))
+    result.tokens = tokens
+    result.word_counts = counts
+    result.token_cache_hits = hits
+    return result
+
+
 def execute_program(
     frame: ColumnarFrame,
     program: ShardProgram,
@@ -379,6 +601,8 @@ def execute_program(
     dedups: dict[int, GlobalDedup] | None = None,
     cache: ShardCache | None = None,
     col_fps: dict[int, dict[str, str]] | None = None,
+    token_fps: dict[str, str] | None = None,
+    count_fp: str | None = None,
     digest: str | None = None,
     materialize: bool = True,
 ) -> ShardResult:
@@ -386,8 +610,9 @@ def execute_program(
 
     Cleaned columns live as *flat* byte buffers from their op chain until
     the very end — row filters apply straight to the buffers — so no
-    decode/re-encode round trip happens inside the program. With
-    ``materialize=False`` the buffers are left in ``result.flat`` for
+    decode/re-encode round trip happens inside the program; token encoding
+    and word counting read the surviving rows straight off those buffers.
+    With ``materialize=False`` the buffers are left in ``result.flat`` for
     zero-copy transport (the process executor ships them via shared
     memory); ``materialize=True`` folds them back into the frame.
     """
@@ -448,6 +673,60 @@ def execute_program(
                 frame = frame.ensure_column(c)
         frame = frame.select([c for c in frame.columns if c in live])
         flat = {c: b for c, b in flat.items() if c in live}
+
+    # -- token space: encode + count on the surviving rows ------------------
+    if program.tokens is not None or program.count_words:
+        rows_memo: dict[str, list] = {}
+
+        def rows_of(col: str) -> list:
+            if col not in rows_memo:
+                if col in flat:
+                    rows_memo[col] = B.unflatten(flat[col])
+                else:
+                    rows_memo[col] = list(frame[col])
+            return rows_memo[col]
+
+        t0 = time.perf_counter()
+        n = len(frame)
+        if program.tokens is not None:
+            tp = program.tokens
+            for spec in tp.specs:
+                key = None
+                if cache is not None and token_fps is not None and digest is not None:
+                    fp = token_fps.get(spec.name)
+                    key = cache.key(digest, spec.name, fp) if fp else None
+                    if key:
+                        hit = cache.load_tokens(key, spec.max_len)
+                        if hit is not None and len(hit) == n:
+                            result.tokens[spec.name] = hit
+                            result.token_cache_hits += 1
+                            continue
+                arr = encode_rows(
+                    rows_of(spec.column), tp.stoi, spec.max_len, spec.add_start_end
+                )
+                result.tokens[spec.name] = arr
+                if key:
+                    result.token_cache_misses += 1
+                    cache.store(key, arr)
+        if program.count_words:
+            counts = None
+            key = None
+            if cache is not None and count_fp is not None and digest is not None:
+                key = cache.key(digest, "__word_counts__", count_fp)
+                counts = cache.load_counts(key)
+                if counts is not None:
+                    result.token_cache_hits += 1
+            if counts is None:
+                counts = Counter()
+                for col in program.count_words:
+                    for t in rows_of(col):
+                        counts.update((t or "").split())
+                if key:
+                    result.token_cache_misses += 1
+                    cache.store_counts(key, counts)
+            result.word_counts = counts
+        result.tokenize_s += time.perf_counter() - t0
+
     if materialize:
         for c, b in flat.items():
             frame = frame.ensure_column(c).with_flat(c, b)
@@ -478,14 +757,16 @@ class ThreadShardExecutor:
         *,
         workers: int = 2,
         cache_dir: str | Path | None = None,
-        postprocess=None,
     ):
         self.program = program
-        self._postprocess = postprocess
         self.cache_hits = 0
         self.cache_misses = 0
+        self.token_cache_hits = 0
+        self.token_cache_misses = 0
         self._cache = ShardCache(cache_dir) if cache_dir is not None else None
         self._col_fps = step_column_fingerprints(program) if self._cache else None
+        self._token_fps = token_fingerprints(program) if self._cache else None
+        self._count_fp = count_fingerprint(program) if self._cache else None
         self._dedups = {
             i: GlobalDedup(arg)
             for i, (kind, arg) in enumerate(program.steps)
@@ -493,6 +774,7 @@ class ThreadShardExecutor:
         }
         self._agg_lock = threading.Lock()
         self._parse_s = self._pre_s = self._clean_s = self._post_s = 0.0
+        self._tokenize_s = 0.0
         self._pool = ShardPool(
             shards, self._process, n_readers=max(int(workers), 1)
         )
@@ -501,6 +783,12 @@ class ThreadShardExecutor:
         t0 = time.perf_counter()
         if self._cache is not None:
             data, digest = ing.read_shard_bytes(path)
+            fast = _load_cached_products(
+                self.program, self._cache, self._token_fps, self._count_fp, digest
+            )
+            if fast is not None:
+                fast.parse_s = time.perf_counter() - t0
+                return fast
             frame = ing.parse_shard_bytes(data, self.program.fields)
         else:
             digest = None
@@ -512,13 +800,14 @@ class ThreadShardExecutor:
             dedups=self._dedups,
             cache=self._cache,
             col_fps=self._col_fps,
+            token_fps=self._token_fps,
+            count_fp=self._count_fp,
             digest=digest,
+            # Token/count products are the output; folding flat buffers
+            # back into the frame would be wasted decode work.
+            materialize=self.program.tokens is None and not self.program.count_words,
         )
         res.parse_s = parse_s
-        if self._postprocess is not None:
-            # Runs inside the reader thread, so per-shard tokenization
-            # overlaps across shards exactly like cleaning does.
-            res.payload = self._postprocess(res.frame)
         return res
 
     def _account(self, res: ShardResult) -> None:
@@ -527,14 +816,19 @@ class ThreadShardExecutor:
             self._pre_s += res.pre_clean_s
             self._clean_s += res.clean_s
             self._post_s += res.post_clean_s
+            self._tokenize_s += res.tokenize_s
             self.cache_hits += res.cache_hits
             self.cache_misses += res.cache_misses
+            self.token_cache_hits += res.token_cache_hits
+            self.token_cache_misses += res.token_cache_misses
 
     @property
     def timings(self):
         from .plan import StageTimings
 
-        return StageTimings(self._parse_s, self._pre_s, self._clean_s, self._post_s)
+        return StageTimings(
+            self._parse_s, self._pre_s, self._clean_s, self._post_s, self._tokenize_s
+        )
 
     def __iter__(self) -> Iterator[ShardResult]:
         for res in self._pool:
@@ -633,37 +927,92 @@ def _unpack_columns(payload: memoryview, metas: list[dict]) -> ColumnarFrame:
     return ColumnarFrame(cols)
 
 
+def _pack_tokens(
+    payload: bytes, tokens: dict[str, np.ndarray]
+) -> tuple[bytes, list[dict]]:
+    """Append int32 token arrays to a payload as 8-byte-aligned raw
+    sections (metadata records name/offset/shape)."""
+    buf = bytearray(payload)
+    metas: list[dict] = []
+    for name, arr in tokens.items():
+        buf += b"\x00" * ((-len(buf)) % 8)
+        metas.append(
+            {
+                "name": name,
+                "off": len(buf),
+                "rows": int(arr.shape[0]),
+                "width": int(arr.shape[1]),
+            }
+        )
+        buf += np.ascontiguousarray(arr, dtype=np.int32).tobytes()
+    return bytes(buf), metas
+
+
+def _unpack_tokens(payload: memoryview, metas: list[dict]) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    for m in metas:
+        arr = np.frombuffer(
+            payload, dtype=np.int32, count=m["rows"] * m["width"], offset=m["off"]
+        ).reshape(m["rows"], m["width"])
+        out[m["name"]] = arr.copy()  # the shm segment is unlinked after
+    return out
+
+
 def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
-    """Worker process: pull (shm, size, digest) tasks until sentinel."""
+    """Worker process: pull (task_id, shm_name, meta, digest) tasks until
+    sentinel. ``meta`` is the byte count of the shared-memory segment —
+    or, when ``shm_name`` is None (feeder's fully-cached fast path, no
+    shm copy made), the shard's file path for the rare fallback re-read
+    (an entry vanished or corrupted between probe and load)."""
     from multiprocessing import shared_memory
 
     cache = ShardCache(cache_dir) if cache_dir is not None else None
     col_fps = step_column_fingerprints(program) if cache is not None else None
+    token_fps = token_fingerprints(program) if cache is not None else None
+    count_fp = count_fingerprint(program) if cache is not None else None
+    token_space = program.tokens is not None or bool(program.count_words)
     while True:
         task = task_q.get()
         if task is None:
             break
-        task_id, shm_name, nbytes, digest = task
+        task_id, shm_name, meta, digest = task
         try:
             t0 = time.perf_counter()
-            seg = shared_memory.SharedMemory(name=shm_name)
-            try:
-                data = bytes(seg.buf[:nbytes])
-            finally:
-                seg.close()
-            frame = ing.parse_shard_bytes(data, program.fields)
-            parse_s = time.perf_counter() - t0
-            res = execute_program(
-                frame,
-                program,
-                cache=cache,
-                col_fps=col_fps,
-                digest=digest,
-                materialize=False,
+            res = _load_cached_products(program, cache, token_fps, count_fp, digest)
+            if res is None:
+                if shm_name is None:
+                    with open(meta, "rb") as fh:
+                        data = fh.read()
+                else:
+                    seg = shared_memory.SharedMemory(name=shm_name)
+                    try:
+                        data = bytes(seg.buf[:meta])
+                    finally:
+                        seg.close()
+                frame = ing.parse_shard_bytes(data, program.fields)
+                res = execute_program(
+                    frame,
+                    program,
+                    cache=cache,
+                    col_fps=col_fps,
+                    token_fps=token_fps,
+                    count_fp=count_fp,
+                    digest=digest,
+                    materialize=False,
+                )
+            res.parse_s = time.perf_counter() - t0 - res.tokenize_s - (
+                res.pre_clean_s + res.clean_s + res.post_clean_s
             )
-            res.parse_s = parse_s
-            out_cols = list(dict.fromkeys(list(res.frame.columns) + list(res.flat)))
-            payload, metas = _pack_columns(res.frame, res.flat, out_cols)
+            if token_space:
+                # Token arrays / counts are the product; text columns stay
+                # in the worker instead of riding the transport for nothing.
+                payload, metas = b"", []
+            else:
+                out_cols = list(
+                    dict.fromkeys(list(res.frame.columns) + list(res.flat))
+                )
+                payload, metas = _pack_columns(res.frame, res.flat, out_cols)
+            payload, tok_metas = _pack_tokens(payload, res.tokens)
             out = shared_memory.SharedMemory(create=True, size=max(len(payload), 1))
             out.buf[: len(payload)] = payload
             out_name = out.name
@@ -676,12 +1025,21 @@ def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
                         "shm": out_name,
                         "size": len(payload),
                         "columns": metas,
+                        "tokens": tok_metas,
+                        "word_counts": (
+                            dict(res.word_counts)
+                            if res.word_counts is not None
+                            else None
+                        ),
                         "parse_s": res.parse_s,
                         "pre_clean_s": res.pre_clean_s,
                         "clean_s": res.clean_s,
                         "post_clean_s": res.post_clean_s,
+                        "tokenize_s": res.tokenize_s,
                         "cache_hits": res.cache_hits,
                         "cache_misses": res.cache_misses,
+                        "token_cache_hits": res.token_cache_hits,
+                        "token_cache_misses": res.token_cache_misses,
                     },
                 )
             )
@@ -709,9 +1067,7 @@ class ProcessShardExecutor:
         workers: int = 2,
         cache_dir: str | Path | None = None,
         max_inflight: int | None = None,
-        postprocess=None,
     ):
-        self._postprocess = postprocess
         if program.has_dedup:
             raise UnsupportedPlanError(
                 "drop_duplicates needs cross-shard state; use the thread executor"
@@ -719,7 +1075,16 @@ class ProcessShardExecutor:
         self.program = program
         self.cache_hits = 0
         self.cache_misses = 0
+        self.token_cache_hits = 0
+        self.token_cache_misses = 0
         self._parse_s = self._pre_s = self._clean_s = self._post_s = 0.0
+        self._tokenize_s = 0.0
+        # Driver-side fast-path probe state: when every token-space
+        # product of a shard already sits in the cache, the feeder skips
+        # the shared-memory copy (workers load straight from disk).
+        self._cache = ShardCache(cache_dir) if cache_dir is not None else None
+        self._token_fps = token_fingerprints(program) if self._cache else None
+        self._count_fp = count_fingerprint(program) if self._cache else None
         self._shards = [Path(s) for s in shards]
         self._stopped = threading.Event()
         self._feed_errors: list[BaseException] = []
@@ -760,6 +1125,14 @@ class ProcessShardExecutor:
                 if self._stopped.is_set():
                     return
                 data, digest = ing.read_shard_bytes(path)
+                if products_fully_cached(
+                    self.program, self._cache, self._token_fps, self._count_fp, digest
+                ):
+                    # Fully cached: no shm copy; ship the path so the
+                    # worker can fall back to its own read if an entry
+                    # vanishes between this probe and its load.
+                    self._task_q.put((i, None, str(path), digest))
+                    continue
                 seg = shared_memory.SharedMemory(create=True, size=max(len(data), 1))
                 seg.buf[: len(data)] = data
                 with self._seg_lock:
@@ -833,7 +1206,10 @@ class ProcessShardExecutor:
                 raise RuntimeError(f"shard worker failed:\n{body}")
             seg = shared_memory.SharedMemory(name=body["shm"])
             try:
-                frame = _unpack_columns(seg.buf[: body["size"]], body["columns"])
+                view = seg.buf[: body["size"]]
+                frame = _unpack_columns(view, body["columns"])
+                tokens = _unpack_tokens(view, body.get("tokens", []))
+                del view  # release the exported buffer before closing
             finally:
                 seg.close()
                 seg.unlink()
@@ -841,26 +1217,35 @@ class ProcessShardExecutor:
             self._pre_s += body["pre_clean_s"]
             self._clean_s += body["clean_s"]
             self._post_s += body["post_clean_s"]
+            self._tokenize_s += body.get("tokenize_s", 0.0)
             self.cache_hits += body["cache_hits"]
             self.cache_misses += body["cache_misses"]
+            self.token_cache_hits += body.get("token_cache_hits", 0)
+            self.token_cache_misses += body.get("token_cache_misses", 0)
             res = ShardResult(
                 frame,
                 parse_s=body["parse_s"],
                 pre_clean_s=body["pre_clean_s"],
                 clean_s=body["clean_s"],
                 post_clean_s=body["post_clean_s"],
+                tokenize_s=body.get("tokenize_s", 0.0),
                 cache_hits=body["cache_hits"],
                 cache_misses=body["cache_misses"],
+                token_cache_hits=body.get("token_cache_hits", 0),
+                token_cache_misses=body.get("token_cache_misses", 0),
             )
-            if self._postprocess is not None:
-                res.payload = self._postprocess(frame)
+            res.tokens = tokens
+            counts = body.get("word_counts")
+            res.word_counts = Counter(counts) if counts is not None else None
             yield res
 
     @property
     def timings(self):
         from .plan import StageTimings
 
-        return StageTimings(self._parse_s, self._pre_s, self._clean_s, self._post_s)
+        return StageTimings(
+            self._parse_s, self._pre_s, self._clean_s, self._post_s, self._tokenize_s
+        )
 
     def _drain_results(self) -> None:
         from multiprocessing import shared_memory
@@ -932,7 +1317,6 @@ def make_executor(
     workers: int = 2,
     cache_dir: str | Path | None = None,
     executor: str | None = None,
-    postprocess=None,
 ):
     """Pick the physical shard executor.
 
@@ -976,9 +1360,7 @@ def make_executor(
     if choice == "process":
         return ProcessShardExecutor(
             shards, program, workers=n_proc, cache_dir=cache_dir,
-            postprocess=postprocess,
         )
     return ThreadShardExecutor(
         shards, program, workers=workers, cache_dir=cache_dir,
-        postprocess=postprocess,
     )

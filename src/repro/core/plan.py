@@ -37,7 +37,13 @@ from typing import Any, Iterator, Sequence
 
 import numpy as np
 
-from ..data.batching import TokenSpec, encode_frame_columns, pad_batch, split_indices
+from ..data.batching import (
+    TokenSpec,
+    emit_bucketed,
+    encode_frame_columns,
+    pad_batch,
+    split_indices,
+)
 from . import bytesops as B
 from . import ingest as ing
 from .frame import ColumnarFrame
@@ -47,16 +53,19 @@ from .stages import Stage
 
 @dataclass
 class StageTimings:
-    """Paper §3 timing attribution (eq. 7)."""
+    """Paper §3 timing attribution (eq. 7), extended with the token step:
+    ``tokenize`` covers text→int32 encoding and vocabulary counting, so
+    the Table-3-style attribution spans the full text→tensor path."""
 
     ingestion: float = 0.0
     pre_cleaning: float = 0.0
     cleaning: float = 0.0
     post_cleaning: float = 0.0
+    tokenize: float = 0.0
 
     @property
     def preprocessing(self) -> float:
-        return self.pre_cleaning + self.cleaning + self.post_cleaning
+        return self.pre_cleaning + self.cleaning + self.post_cleaning + self.tokenize
 
     @property
     def cumulative(self) -> float:
@@ -68,6 +77,7 @@ class StageTimings:
             "pre_cleaning": self.pre_cleaning,
             "cleaning": self.cleaning,
             "post_cleaning": self.post_cleaning,
+            "tokenize": self.tokenize,
             "preprocessing": self.preprocessing,
             "cumulative": self.cumulative,
         }
@@ -162,12 +172,19 @@ class Batch(PlanNode):
     seed: int = 0
     drop_remainder: bool = True
     pad_to: int | None = None
+    # Length-bucketed assembly: rows grouped by the payload length of the
+    # ``bucket_by`` token column into the fixed ``buckets`` widths.
+    bucket_by: str | None = None
+    buckets: tuple[int, ...] = ()
 
     def describe(self) -> str:
-        return (
+        base = (
             f"Batch(size={self.batch_size}, shuffle={self.shuffle}, "
-            f"drop_remainder={self.drop_remainder}, pad_to={self.pad_to})"
+            f"drop_remainder={self.drop_remainder}, pad_to={self.pad_to}"
         )
+        if self.bucket_by is not None:
+            base += f", bucket_by={self.bucket_by}, buckets={list(self.buckets)}"
+        return base + ")"
 
 
 @dataclass(frozen=True)
@@ -288,9 +305,18 @@ def _node_signature(node: PlanNode) -> bytes:
         return f"SourceJsonDirs({list(node.directories)}, {list(node.fields)})".encode()
     if isinstance(node, SourceFrame):
         return f"SourceFrame(rows={len(node.frame)}, fields={node.frame.field_names})".encode()
-    # Remaining nodes are fully described by their parameters (Tokenize's
-    # describe() covers the specs; tokenizer identity is deliberately
-    # excluded — fingerprints key *preprocessing*, not vocabularies).
+    if isinstance(node, Tokenize):
+        # Spec parameters in full; tokenizer identity is deliberately
+        # excluded — plan fingerprints key *preprocessing*, not
+        # vocabularies (the token cache adds the vocab fingerprint).
+        parts = [b"Tokenize"]
+        for s in node.specs:
+            parts.append(
+                f"{s.column}->{s.name}:max_len={s.max_len}"
+                f":start_end={s.add_start_end}".encode()
+            )
+        return b"|".join(parts)
+    # Remaining nodes are fully described by their parameters.
     return node.describe().encode()
 
 
@@ -393,7 +419,11 @@ def continue_frame_plan(
     This is how a derived plan resumes from a memoized prefix instead of
     re-ingesting."""
     t = StageTimings(
-        timings.ingestion, timings.pre_cleaning, timings.cleaning, timings.post_cleaning
+        timings.ingestion,
+        timings.pre_cleaning,
+        timings.cleaning,
+        timings.post_cleaning,
+        timings.tokenize,
     )
     for node in nodes:
         t0 = time.perf_counter()
@@ -428,6 +458,41 @@ def execute_array_nodes(
 # ---------------------------------------------------------------------------
 
 
+def _drain_bucketed(
+    pool: dict[str, np.ndarray],
+    order: np.ndarray,
+    batch: Batch,
+    rng: np.random.Generator,
+    final: bool,
+) -> tuple[list[dict[str, np.ndarray]], dict[str, np.ndarray] | None]:
+    """Bucketed drain: (emitted batches, carry rows). Full batches are
+    per-bucket, sliced to the bucket width; per-bucket remainders carry to
+    the next window, or on the final drain follow the batch node's
+    remainder policy (shared ``emit_remainders``). When shuffling, the
+    emitted batch order is permuted too — matching the whole-frame
+    assembler — so the stream is not a systematic short-to-long length
+    run within every window."""
+    from ..data.batching import derive_buckets, emit_remainders
+
+    buckets = batch.buckets or derive_buckets(pool[batch.bucket_by].shape[1])
+    out, rest = emit_bucketed(pool, order, batch.batch_size, batch.bucket_by, buckets)
+    carry: dict[str, np.ndarray] | None = None
+    if rest.size:
+        rest_rows = {k: v[rest] for k, v in pool.items()}
+        if not final:
+            carry = rest_rows
+        else:
+            out.extend(
+                emit_remainders(
+                    rest_rows, batch.bucket_by, buckets,
+                    batch.pad_to, batch.drop_remainder,
+                )
+            )
+    if batch.shuffle:
+        rng.shuffle(out)
+    return out, carry
+
+
 def _batched(
     chunks: Iterator[dict[str, np.ndarray]],
     batch: Batch,
@@ -436,7 +501,9 @@ def _batched(
 ) -> Iterator[dict[str, np.ndarray]]:
     """Accumulate per-shard arrays and slice fixed-size batches; when
     shuffling, permute within a bounded buffer (streaming cannot see the
-    whole epoch, so this is windowed shuffle a la tf.data)."""
+    whole epoch, so this is windowed shuffle a la tf.data). With a
+    bucketed batch node, rows group by payload length within the same
+    window (windowed bucketing a la tf.data bucket_by_sequence_length)."""
     parts: list[dict[str, np.ndarray]] = []
     n_buf = 0
     threshold = shuffle_buffer if batch.shuffle else batch.batch_size
@@ -449,9 +516,15 @@ def _batched(
         pool = {k: np.concatenate([p[k] for p in parts]) for k in keys}
         parts, n_buf = [], 0
         n = len(next(iter(pool.values())))
+        order = rng.permutation(n) if batch.shuffle else np.arange(n)
+        if batch.bucket_by is not None:
+            out, carry = _drain_bucketed(pool, order, batch, rng, final)
+            if carry is not None:
+                parts, n_buf = [carry], len(next(iter(carry.values())))
+            yield from out
+            return
         if batch.shuffle:
-            perm = rng.permutation(n)
-            pool = {k: v[perm] for k, v in pool.items()}
+            pool = {k: v[order] for k, v in pool.items()}
         full_stop = (n // batch.batch_size) * batch.batch_size
         for s in range(0, full_stop, batch.batch_size):
             yield {k: v[s : s + batch.batch_size] for k, v in pool.items()}
@@ -530,30 +603,32 @@ def stream_batches(
             )
 
     shards = ing.list_shards(src.directories)
-    # Compile the per-shard program once; reuse across shards and epochs.
+    # Compile the per-shard program once — token encoding included, so the
+    # executors (reader threads or worker processes) emit int32 token
+    # buffers and the driver never runs a per-word Python loop.
     spec_cols = tuple(dict.fromkeys(spec.column for spec in tok.specs))
+    token_plan = EX.TokenPlan(
+        specs=tuple(tok.specs),
+        stoi=dict(tok.tokenizer.stoi),
+        vocab_fp=tok.tokenizer.fingerprint,
+    )
     program = EX.compile_shard_program(
-        frame_nodes, optimize=optimize, output_columns=spec_cols
+        frame_nodes, optimize=optimize, output_columns=spec_cols, tokens=token_plan
     )
 
     epoch = 0
     while epochs is None or epoch < epochs:
-        def encode(frame: ColumnarFrame) -> dict[str, np.ndarray]:
-            columns = {spec.column: frame[spec.column] for spec in tok.specs}
-            return encode_frame_columns(columns, tok.tokenizer, tok.specs)
-
         exec_ = EX.make_executor(
             shards,
             program,
             workers=max(workers, 1),
             cache_dir=cache_dir,
             executor=executor,
-            postprocess=encode,
         )
 
         def chunks() -> Iterator[dict[str, np.ndarray]]:
             for res in exec_:
-                yield res.payload
+                yield res.tokens
 
         rng = np.random.default_rng(batch.seed + epoch)
         buffer = shuffle_buffer or max(8 * batch.batch_size, 1024)
@@ -572,6 +647,12 @@ def stream_batches(
                 stats["cache_hits"] = stats.get("cache_hits", 0) + exec_.cache_hits
                 stats["cache_misses"] = (
                     stats.get("cache_misses", 0) + exec_.cache_misses
+                )
+                stats["token_cache_hits"] = (
+                    stats.get("token_cache_hits", 0) + exec_.token_cache_hits
+                )
+                stats["token_cache_misses"] = (
+                    stats.get("token_cache_misses", 0) + exec_.token_cache_misses
                 )
                 stats["timings"] = exec_.timings
         if not produced:

@@ -2,9 +2,11 @@
 
 These are the array-level operators of the lazy ``Dataset`` plan
 (:mod:`repro.core.dataset`): a ``TokenSpec`` describes how one text column
-becomes one token array, ``encode_column`` executes it, and ``batches``
-slices the resulting arrays into fixed-shape batches (with optional
-remainder padding for jit shape stability). The legacy eager helpers
+becomes one token array, ``encode_rows``/``encode_column`` execute it, and
+``batches`` slices the resulting arrays into fixed-shape batches — either
+one fixed ``max_len`` shape, or a small fixed set of **length buckets**
+(``bucket_by=``) so short rows stop paying full-width padding while jit
+still sees a bounded shape set. The legacy eager helpers
 (``seq2seq_arrays``, ``train_val_split``) remain as thin wrappers.
 """
 
@@ -15,7 +17,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from .tokenizer import PAD, WordTokenizer
+from .tokenizer import END, PAD, START, UNK, WordTokenizer
 
 
 @dataclass(frozen=True)
@@ -45,16 +47,36 @@ def seq2seq_specs(
     )
 
 
+def encode_rows(
+    texts: Sequence[str | None],
+    stoi: dict[str, int],
+    max_len: int,
+    add_start_end: bool = False,
+) -> np.ndarray:
+    """Encode rows against a word-index map into one (n, max_len) int32
+    array. This is the single encoding implementation: the eager oracle
+    (:func:`encode_column`) and the per-shard executor token step
+    (:mod:`repro.core.executor`) both call it, so they are byte-identical
+    by construction."""
+    out = np.full((len(texts), max_len), PAD, dtype=np.int32)
+    get = stoi.get
+    for i, t in enumerate(texts):
+        ids = [get(w, UNK) for w in (t or "").split()]
+        if add_start_end:
+            ids = [START] + ids[: max_len - 2] + [END]
+        else:
+            ids = ids[:max_len]
+        out[i, : len(ids)] = ids
+    return out
+
+
 def encode_column(
     texts: Sequence[str | None],
     tokenizer: WordTokenizer,
     max_len: int,
     add_start_end: bool = False,
 ) -> np.ndarray:
-    out = np.zeros((len(texts), max_len), dtype=np.int32)
-    for i, t in enumerate(texts):
-        out[i] = tokenizer.encode(t or "", max_len, add_start_end=add_start_end)
-    return out
+    return encode_rows(texts, tokenizer.stoi, max_len, add_start_end)
 
 
 def encode_frame_columns(
@@ -87,6 +109,57 @@ def seq2seq_arrays(
     return encode_frame_columns(columns, tokenizer, specs)
 
 
+# ---------------------------------------------------------------------------
+# Length-bucketed assembly
+# ---------------------------------------------------------------------------
+
+
+def effective_lengths(arr: np.ndarray) -> np.ndarray:
+    """Per-row payload length of a padded token array: 1 + index of the
+    last non-PAD token (0 for all-PAD rows). Trailing padding beyond it is
+    droppable without losing information, even if PAD ids appear *inside*
+    the row (a literal ``<pad>`` word encodes to 0)."""
+    nonpad = arr != PAD
+    lens = arr.shape[1] - np.argmax(nonpad[:, ::-1], axis=1)
+    return np.where(nonpad.any(axis=1), lens, 0).astype(np.int64)
+
+
+def derive_buckets(max_len: int, n_buckets: int = 4) -> tuple[int, ...]:
+    """A small fixed set of bucket widths ending at ``max_len`` (linear
+    steps, deduplicated) — bounded shape set, jit-compilation friendly."""
+    n = max(int(n_buckets), 1)
+    widths = sorted({max(1, (max_len * i) // n) for i in range(1, n + 1)} | {max_len})
+    return tuple(widths)
+
+
+def assign_buckets(lengths: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
+    """Index of the smallest bucket wide enough for each row. Rows longer
+    than the last bucket land in it (they were already truncated to
+    ``max_len`` == the last bucket by encoding)."""
+    edges = np.asarray(buckets, dtype=np.int64)
+    idx = np.searchsorted(edges, np.asarray(lengths, dtype=np.int64), side="left")
+    return np.minimum(idx, len(edges) - 1)
+
+
+def slice_to_bucket(
+    batch: dict[str, np.ndarray], bucket_by: str, width: int
+) -> dict[str, np.ndarray]:
+    return {
+        k: (v[:, :width] if k == bucket_by else v) for k, v in batch.items()
+    }
+
+
+def pad_token_fraction(batches: Sequence[dict[str, np.ndarray]], column: str) -> float:
+    """Fraction of entries in ``column`` that are padding beyond each row's
+    payload — the accelerator-cycle waste bucketing removes."""
+    pad = total = 0
+    for b in batches:
+        arr = b[column]
+        total += arr.size
+        pad += int(arr.size - effective_lengths(arr).sum())
+    return pad / total if total else 0.0
+
+
 def pad_batch(batch: dict[str, np.ndarray], rows: int) -> dict[str, np.ndarray]:
     """Pad a partial batch with PAD rows up to ``rows`` (shape stability)."""
     n = len(next(iter(batch.values())))
@@ -100,6 +173,67 @@ def pad_batch(batch: dict[str, np.ndarray], rows: int) -> dict[str, np.ndarray]:
     return out
 
 
+def emit_bucketed(
+    arrays: dict[str, np.ndarray],
+    order: np.ndarray,
+    batch_size: int,
+    bucket_by: str,
+    buckets: Sequence[int],
+) -> tuple[list[dict[str, np.ndarray]], np.ndarray]:
+    """(full bucket batches in ``order``-scan order, leftover row indices).
+
+    Rows are scanned in ``order``; each full batch keeps only rows of one
+    bucket and is sliced to that bucket's width on the ``bucket_by``
+    column. Leftovers (per-bucket remainders) come back for the caller to
+    carry, pad, or drop."""
+    lengths = effective_lengths(arrays[bucket_by])
+    assignment = assign_buckets(lengths, buckets)
+    out: list[dict[str, np.ndarray]] = []
+    leftovers: list[np.ndarray] = []
+    for bi, width in enumerate(buckets):
+        rows = order[assignment[order] == bi]
+        full = (len(rows) // batch_size) * batch_size
+        for s in range(0, full, batch_size):
+            sel = rows[s : s + batch_size]
+            out.append(
+                slice_to_bucket(
+                    {k: v[sel] for k, v in arrays.items()}, bucket_by, width
+                )
+            )
+        if full < len(rows):
+            leftovers.append(rows[full:])
+    rest = (
+        np.concatenate(leftovers)
+        if leftovers
+        else np.zeros(0, dtype=np.int64)
+    )
+    return out, rest
+
+
+def emit_remainders(
+    rows: dict[str, np.ndarray],
+    bucket_by: str,
+    buckets: Sequence[int],
+    pad_to: int | None,
+    drop_remainder: bool,
+) -> list[dict[str, np.ndarray]]:
+    """Per-bucket remainder batches under the remainder policy (empty when
+    dropped). Remainders stay per-bucket so every emitted batch keeps a
+    bucket-set shape and at most batch_size rows — never one concatenated
+    full-width catch-all. Shared by the whole-frame and streaming
+    assemblers so their remainder semantics cannot drift."""
+    out: list[dict[str, np.ndarray]] = []
+    if (pad_to is None and drop_remainder) or not len(next(iter(rows.values()))):
+        return out
+    assignment = assign_buckets(effective_lengths(rows[bucket_by]), buckets)
+    for bi in np.unique(assignment):
+        part = {k: v[assignment == bi] for k, v in rows.items()}
+        if pad_to is not None:
+            part = pad_batch(part, pad_to)
+        out.append(slice_to_bucket(part, bucket_by, buckets[bi]))
+    return out
+
+
 def batches(
     arrays: dict[str, np.ndarray],
     batch_size: int,
@@ -108,12 +242,32 @@ def batches(
     seed: int = 0,
     drop_remainder: bool = True,
     pad_to: int | None = None,
+    bucket_by: str | None = None,
+    buckets: Sequence[int] = (),
 ) -> Iterator[dict[str, np.ndarray]]:
-    """Fixed-size batches; a ``pad_to`` remainder is padded instead of dropped."""
+    """Fixed-size batches; a ``pad_to`` remainder is padded instead of
+    dropped. With ``bucket_by``, rows are grouped by payload length into
+    the fixed ``buckets`` widths and the bucketed column is sliced to its
+    bucket — every batch still has one of ``len(buckets)`` static shapes."""
     n = len(next(iter(arrays.values())))
     idx = np.arange(n)
+    rng = np.random.default_rng(seed)
     if shuffle:
-        np.random.default_rng(seed).shuffle(idx)
+        rng.shuffle(idx)
+    if bucket_by is not None:
+        if not buckets:
+            buckets = derive_buckets(arrays[bucket_by].shape[1])
+        out, rest = emit_bucketed(arrays, idx, batch_size, bucket_by, buckets)
+        out.extend(
+            emit_remainders(
+                {k: v[rest] for k, v in arrays.items()},
+                bucket_by, buckets, pad_to, drop_remainder,
+            )
+        )
+        if shuffle:
+            rng.shuffle(out)
+        yield from out
+        return
     stop = (n // batch_size) * batch_size if drop_remainder and pad_to is None else n
     for s in range(0, stop, batch_size):
         sel = idx[s : s + batch_size]

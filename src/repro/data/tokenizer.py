@@ -3,19 +3,39 @@
 The paper's Keras lineage uses a Keras ``Tokenizer`` (word-index map built
 from the cleaned corpus). Same here: vocabulary = most frequent words of
 the cleaned text, with the four specials the seq2seq decoder needs.
+
+Fitting is a count aggregation, which makes it distributable exactly like
+Spark's ``CountVectorizer``: each shard counts its own words, the driver
+merges the ``Counter``s, and :meth:`WordTokenizer.from_counts` turns the
+merged counts into a vocabulary. Ordering is deterministic — count
+descending, then word ascending — so a whole-frame fit and a shard-merged
+fit of the same corpus always produce the same vocabulary (plain
+``Counter.most_common`` breaks ties by insertion order, which differs
+between the two).
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 from collections import Counter
 from pathlib import Path
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
 PAD, START, END, UNK = 0, 1, 2, 3
 SPECIALS = ("<pad>", "<start>", "<end>", "<unk>")
+
+
+def top_words(counts: Mapping[str, int], n: int) -> list[str]:
+    """The ``n`` most frequent words under the deterministic tie-break
+    (count desc, word asc) — insertion-order independent, so shard-merged
+    and whole-corpus counts rank identically."""
+    if n <= 0:
+        return []
+    ranked = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+    return [w for w, _ in ranked[:n]]
 
 
 class WordTokenizer:
@@ -24,15 +44,35 @@ class WordTokenizer:
         self.stoi: dict[str, int] = {w: i for i, w in enumerate(self.itos)}
 
     @classmethod
+    def from_counts(
+        cls, counts: Mapping[str, int], vocab_size: int = 8000
+    ) -> "WordTokenizer":
+        """Build from (possibly shard-merged) word counts — the ``fit``
+        half of the Spark CountVectorizer-style fit/transform split."""
+        return cls(top_words(counts, max(vocab_size - len(SPECIALS), 0)))
+
+    @classmethod
     def fit(cls, texts: Iterable[str], vocab_size: int = 8000) -> "WordTokenizer":
         counts: Counter = Counter()
         for t in texts:
             counts.update(t.split())
-        vocab = [w for w, _ in counts.most_common(max(vocab_size - len(SPECIALS), 0))]
-        return cls(vocab)
+        return cls.from_counts(counts, vocab_size)
 
     def __len__(self) -> int:
         return len(self.itos)
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash of the vocabulary (order-sensitive). Token
+        cache entries are keyed by it, so refitting with different data or
+        a different ``vocab_size`` invalidates cached token arrays without
+        touching the cleaned-text entries."""
+        h = hashlib.blake2b(digest_size=16)
+        for w in self.itos:
+            enc = w.encode("utf-8", errors="surrogatepass")
+            h.update(len(enc).to_bytes(4, "little"))
+            h.update(enc)
+        return h.hexdigest()
 
     def encode(self, text: str, max_len: int, add_start_end: bool = False) -> np.ndarray:
         ids = [self.stoi.get(w, UNK) for w in text.split()]

@@ -21,9 +21,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get, get_smoke
-from ..core.p3sapp import run_p3sapp
+from ..core.p3sapp import p3sapp_dataset
 from ..data.synthetic import write_corpus
-from ..data.tokenizer import WordTokenizer
 from ..distributed.sharding import DEFAULT_RULES, data_axis_names, tree_shardings
 from ..models.lm import LM, MeshContext
 from ..optim.adamw import AdamW, warmup_cosine
@@ -35,9 +34,12 @@ from .mesh import make_host_mesh, make_production_mesh
 def build_dataset(cfg, seq_len: int, corpus_mb: float, seed: int) -> np.ndarray:
     corpus = tempfile.mkdtemp(prefix="p3sapp_train_")
     write_corpus(corpus, total_bytes=int(corpus_mb * 1e6), n_files=6, seed=seed)
-    records, timings = run_p3sapp([corpus], optimize=True)
+    ds = p3sapp_dataset([corpus])
+    records, timings = ds.execute(optimize=True)
     print(f"P3SAPP: {len(records)} records in {timings.cumulative:.2f}s")
-    tok = WordTokenizer.fit((r["abstract"] for r in records), vocab_size=cfg.vocab_size)
+    # vocabulary fitting as a plan verb (shard-merged counts when the
+    # frame is not yet materialized; here it reuses the memoized frame)
+    tok = ds.fit_vocab(["abstract"], vocab_size=cfg.vocab_size)
     stream: list[int] = []
     for r in records:
         stream.extend(tok.stoi.get(w, 3) for w in r["abstract"].split())

@@ -5,8 +5,11 @@ Whole-frame (:func:`repro.core.plan.execute_frame_plan`), streaming-thread
 (:class:`repro.core.executor.ProcessShardExecutor`) execution of the same
 plan must produce byte-identical record multisets (arrival order is
 nondeterministic under work stealing) and attribute wall time to the same
-set of paper stages. Corpora are hypothesis-generated and include the nasty
-cases: unicode, empty rows, NUL bytes, giant rows.
+set of paper stages. The same harness drives token space: executor-emitted
+int32 token arrays must be byte-identical to the eager
+``encode_frame_columns`` oracle, and shard-merged vocabulary fits must
+equal the whole-frame fit exactly. Corpora are hypothesis-generated and
+include the nasty cases: unicode, empty rows, NUL bytes, giant rows.
 """
 
 import json
@@ -29,7 +32,7 @@ from repro.core import plan as P
 from repro.core.dataset import Dataset
 from repro.core.frame import ColumnarFrame
 from repro.core.p3sapp import case_study_stages
-from repro.data.batching import seq2seq_specs
+from repro.data.batching import encode_frame_columns, seq2seq_specs
 from repro.data.tokenizer import WordTokenizer
 
 FIELDS = ("title", "abstract")
@@ -124,6 +127,71 @@ def nonzero_stages(timings):
 # ---------------------------------------------------------------------------
 
 
+def token_row_multiset(token_dicts):
+    """Row-wise byte multiset over a list of per-shard token dicts."""
+    rows = []
+    for tokens in token_dicts:
+        keys = sorted(tokens)
+        n = len(tokens[keys[0]]) if keys else 0
+        for i in range(n):
+            rows.append(tuple(tokens[k][i].tobytes() for k in keys))
+    return sorted(rows)
+
+
+def executor_tokens(executor):
+    out = [res.tokens for res in executor]
+    executor.stop()
+    return out
+
+
+SPECS = seq2seq_specs(max_abstract_len=16, max_title_len=8)
+
+
+def token_program(ds, tok, specs=SPECS):
+    frame_nodes, _ = P.split_plan(ds.plan)
+    spec_cols = tuple(dict.fromkeys(s.column for s in specs))
+    return EX.compile_shard_program(
+        P.optimize_plan(frame_nodes, spec_cols),
+        optimize=True,
+        output_columns=spec_cols,
+        tokens=EX.TokenPlan(tuple(specs), dict(tok.stoi), tok.fingerprint),
+    )
+
+
+def check_token_executors(d, ds, frame):
+    """Executor-emitted token arrays must be byte-identical to the eager
+    encode_frame_columns oracle, and per-shard-counted vocabularies must
+    equal the whole-frame fit."""
+    tok = WordTokenizer.fit(
+        [(v or "") for col in FIELDS for v in frame[col]], vocab_size=256
+    )
+    oracle = encode_frame_columns(
+        {c: frame[c] for c in FIELDS}, tok, SPECS
+    )
+    want = token_row_multiset([oracle])
+    shards = ing.list_shards([d])
+    program = token_program(ds, tok)
+
+    got_thread = token_row_multiset(
+        executor_tokens(EX.ThreadShardExecutor(shards, program, workers=2))
+    )
+    assert got_thread == want
+    got_proc = token_row_multiset(
+        executor_tokens(EX.ProcessShardExecutor(shards, program, workers=2))
+    )
+    assert got_proc == want
+
+    # vocabulary fitting: shard-merged Counters (thread and process) must
+    # reproduce the whole-frame fit word for word
+    whole_ds = chain(d)
+    whole_ds.collect()  # materialize → fit_vocab counts the memoized frame
+    vocab_whole = whole_ds.fit_vocab(vocab_size=64)
+    vocab_thread = chain(d).fit_vocab(vocab_size=64, workers=2, executor="thread")
+    vocab_proc = chain(d).fit_vocab(vocab_size=64, workers=2, executor="process")
+    assert vocab_thread.itos == vocab_whole.itos
+    assert vocab_proc.itos == vocab_whole.itos
+
+
 def check_three_executors(root, records):
     d = write_shards(root, records)
     ds = chain(d)
@@ -146,6 +214,9 @@ def check_three_executors(root, records):
     # paper stages (values differ, the *stage set* must not).
     assert nonzero_stages(thread_ex.timings) == nonzero_stages(whole_t)
     assert nonzero_stages(proc_ex.timings) == nonzero_stages(whole_t)
+
+    # Token space over the same corpus: arrays and vocabularies.
+    check_token_executors(d, ds, frame)
 
 
 @pytest.mark.parametrize(

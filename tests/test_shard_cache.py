@@ -270,6 +270,137 @@ def test_options_after_terminal_reuse_memoized_frame(corpus):
 
 
 # ---------------------------------------------------------------------------
+# token-space cache: vocab-fingerprint keying + per-spec invalidation
+# ---------------------------------------------------------------------------
+
+
+def token_program_for(ds, tok, specs):
+    from repro.data.batching import TokenSpec  # noqa: F401  (doc pointer)
+
+    frame_nodes, _ = P.split_plan(ds.plan)
+    spec_cols = tuple(dict.fromkeys(s.column for s in specs))
+    return EX.compile_shard_program(
+        P.optimize_plan(frame_nodes, spec_cols),
+        optimize=True,
+        output_columns=spec_cols,
+        tokens=EX.TokenPlan(tuple(specs), dict(tok.stoi), tok.fingerprint),
+    )
+
+
+def run_tokens(corpus, program, cache_dir, workers=1):
+    ex = EX.ThreadShardExecutor(
+        ing.list_shards([corpus]), program, workers=workers, cache_dir=cache_dir
+    )
+    rows = []
+    for res in ex:
+        keys = sorted(res.tokens)
+        for i in range(len(res.tokens[keys[0]]) if keys else 0):
+            rows.append(tuple(res.tokens[k][i].tobytes() for k in keys))
+    ex.stop()
+    return sorted(rows), ex
+
+
+@pytest.fixture
+def token_setup(corpus):
+    from repro.data.batching import seq2seq_specs
+    from repro.data.tokenizer import WordTokenizer
+
+    ds = Dataset.from_json_dirs([corpus], FIELDS).dropna(FIELDS).apply(
+        *case_study_stages()
+    )
+    tok = WordTokenizer.fit(
+        (r["abstract"] + " " + r["title"] for r in RECORDS), vocab_size=64
+    )
+    specs = seq2seq_specs(max_abstract_len=16, max_title_len=8)
+    return ds, tok, specs
+
+
+def test_token_cache_warm_run_skips_everything(corpus, tmp_path, token_setup, monkeypatch):
+    ds, tok, specs = token_setup
+    cache_dir = tmp_path / "cache"
+    program = token_program_for(ds, tok, specs)
+
+    plain, _ = run_tokens(corpus, program, cache_dir=None)
+    cold, ex_cold = run_tokens(corpus, program, cache_dir)
+    assert cold == plain
+    assert ex_cold.token_cache_hits == 0
+    assert ex_cold.token_cache_misses == 6  # 3 shards x 2 specs
+
+    # Warm: served straight from token entries — no byte op runs, no shard
+    # is parsed, and the cleaned-text entries are never looked up.
+    calls = []
+    monkeypatch.setattr(EX.B, "apply_ops", lambda buf, ops: calls.append(ops))
+    monkeypatch.setattr(
+        EX.ing, "parse_shard_bytes", lambda *a, **k: pytest.fail("parsed on warm run")
+    )
+    warm, ex_warm = run_tokens(corpus, program, cache_dir)
+    assert warm == cold
+    assert ex_warm.token_cache_hits == 6 and ex_warm.token_cache_misses == 0
+    assert ex_warm.cache_hits == 0 and ex_warm.cache_misses == 0
+    assert calls == []
+
+
+def test_token_cache_keys_include_vocab_fingerprint(corpus, tmp_path, token_setup):
+    from repro.data.tokenizer import WordTokenizer
+
+    ds, tok, specs = token_setup
+    cache_dir = tmp_path / "cache"
+    run_tokens(corpus, token_program_for(ds, tok, specs), cache_dir)
+
+    refit = WordTokenizer.fit((r["abstract"] for r in RECORDS), vocab_size=32)
+    assert refit.fingerprint != tok.fingerprint
+    refit_program = token_program_for(ds, refit, specs)
+    plain, _ = run_tokens(corpus, refit_program, cache_dir=None)
+    got, ex = run_tokens(corpus, refit_program, cache_dir)
+    assert got == plain
+    # every token entry invalidated by the vocab fingerprint...
+    assert ex.token_cache_hits == 0 and ex.token_cache_misses == 6
+    # ...but the cleaned-text entries are untouched and keep hitting
+    assert ex.cache_hits == 6 and ex.cache_misses == 0
+
+
+def test_token_cache_partial_spec_invalidation(corpus, tmp_path, token_setup):
+    from repro.data.batching import TokenSpec
+
+    ds, tok, specs = token_setup
+    cache_dir = tmp_path / "cache"
+    run_tokens(corpus, token_program_for(ds, tok, specs), cache_dir)
+
+    widened = (TokenSpec("abstract", 32, out="encoder_tokens"), specs[1])
+    got, ex = run_tokens(corpus, token_program_for(ds, tok, widened), cache_dir)
+    plain, _ = run_tokens(corpus, token_program_for(ds, tok, widened), cache_dir=None)
+    assert got == plain
+    # only the changed spec recomputes; the other spec's arrays keep hitting
+    assert ex.token_cache_misses == 3 and ex.token_cache_hits == 3
+    # the partial miss forces a real run, which reuses the cleaned text
+    assert ex.cache_hits == 6 and ex.cache_misses == 0
+
+
+def test_fit_vocab_counts_are_cached(corpus, tmp_path):
+    cache_dir = tmp_path / "cache"
+
+    def pipe():
+        return (
+            Dataset.from_json_dirs([corpus], FIELDS)
+            .dropna(FIELDS)
+            .apply(*case_study_stages())
+            .cache(cache_dir)
+        )
+
+    s1: dict = {}
+    tok1 = pipe().fit_vocab(vocab_size=64, workers=1, stats=s1)
+    s2: dict = {}
+    tok2 = pipe().fit_vocab(vocab_size=64, workers=1, stats=s2)
+    assert tok1.itos == tok2.itos
+    assert s1["token_cache_hits"] == 0 and s1["token_cache_misses"] == 3
+    assert s2["token_cache_hits"] == 3 and s2["token_cache_misses"] == 0
+    # a refit from cached counts still matches an uncached whole fit
+    fresh = pipe().cache(False)
+    fresh.collect()
+    assert fresh.fit_vocab(vocab_size=64).itos == tok1.itos
+
+
+# ---------------------------------------------------------------------------
 # Dataset-level .cache() verb
 # ---------------------------------------------------------------------------
 
@@ -297,6 +428,13 @@ def test_dataset_cache_verb_end_to_end(corpus, tmp_path):
     batches1 = list(pipe().iter_batches(stats=stats1))
     stats2: dict = {}
     batches2 = list(pipe().iter_batches(stats=stats2))
+    # Cold: every cleaned column (3 shards x 2 cols) and every token array
+    # (3 shards x 2 specs) misses and is stored.
     assert stats1["cache_hits"] == 0 and stats1["cache_misses"] == 6
-    assert stats2["cache_hits"] == 6 and stats2["cache_misses"] == 0
+    assert stats1["token_cache_hits"] == 0 and stats1["token_cache_misses"] == 6
+    # Warm: the token entries fully cover the plan's products, so shards
+    # are served without parsing or cleaning — 100% token hits, and the
+    # cleaned-text entries are never even looked up.
+    assert stats2["token_cache_hits"] == 6 and stats2["token_cache_misses"] == 0
+    assert stats2["cache_hits"] == 0 and stats2["cache_misses"] == 0
     assert len(batches1) == len(batches2)

@@ -1,0 +1,75 @@
+"""Vocabulary fitting determinism.
+
+``Counter.most_common`` breaks frequency ties by insertion order, so a
+whole-frame fit and a shard-merged fit of the same corpus used to produce
+*different* vocabularies (the merge visits words in shard order). The fix
+is a total order — count descending, then word ascending — applied in both
+the legacy ``fit`` path and the distributed ``from_counts`` path; these
+tests pin it.
+"""
+
+import random
+from collections import Counter
+
+from repro.data.tokenizer import SPECIALS, WordTokenizer, top_words
+
+
+def test_fit_is_insertion_order_independent():
+    # both words tie at count 2; insertion order differs between the texts
+    a = WordTokenizer.fit(["b a", "a b"], vocab_size=8)
+    b = WordTokenizer.fit(["a b", "b a"], vocab_size=8)
+    assert a.itos == b.itos
+    assert a.itos[: len(SPECIALS)] == list(SPECIALS)
+
+
+def test_tie_at_truncation_boundary_is_deterministic():
+    # vocab_size leaves room for exactly one of the two tied words: the
+    # lexicographically smaller one must win regardless of encounter order
+    a = WordTokenizer.fit(["zz aa"], vocab_size=len(SPECIALS) + 1)
+    b = WordTokenizer.fit(["aa zz"], vocab_size=len(SPECIALS) + 1)
+    assert a.itos == b.itos == list(SPECIALS) + ["aa"]
+
+
+def test_top_words_orders_by_count_then_word():
+    counts = {"late": 2, "apple": 2, "zebra": 5, "mid": 3}
+    assert top_words(counts, 10) == ["zebra", "mid", "apple", "late"]
+    assert top_words(counts, 2) == ["zebra", "mid"]
+    assert top_words(counts, 0) == []
+
+
+def test_shard_merged_fit_matches_whole_fit():
+    rng = random.Random(7)
+    words = [f"w{i}" for i in range(40)]
+    texts = [
+        " ".join(rng.choice(words) for _ in range(rng.randrange(1, 12)))
+        for _ in range(120)
+    ]
+    whole = WordTokenizer.fit(texts, vocab_size=32)
+    # shard-by-shard counting in a different visit order, merged on the
+    # driver — the CountVectorizer-style distributed fit
+    merged: Counter = Counter()
+    for shard_start in (2, 1, 0):
+        shard_counts: Counter = Counter()
+        for t in texts[shard_start::3]:
+            shard_counts.update(t.split())
+        merged.update(shard_counts)
+    sharded = WordTokenizer.from_counts(merged, vocab_size=32)
+    assert whole.itos == sharded.itos
+    assert whole.stoi == sharded.stoi
+
+
+def test_fingerprint_tracks_vocabulary():
+    a = WordTokenizer(["alpha", "beta"])
+    b = WordTokenizer(["alpha", "beta"])
+    c = WordTokenizer(["beta", "alpha"])  # order matters: different ids
+    d = WordTokenizer(["alpha"])
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != c.fingerprint
+    assert a.fingerprint != d.fingerprint
+
+
+def test_roundtrip_preserves_fingerprint(tmp_path):
+    tok = WordTokenizer.fit(["the quick brown fox", "the slow fox"], 16)
+    path = tmp_path / "vocab.json"
+    tok.save(path)
+    assert WordTokenizer.load(path).fingerprint == tok.fingerprint
