@@ -28,12 +28,27 @@ import time
 from repro.core import executor as EX
 from repro.core import ingest as ing
 from repro.core import plan as P
+from repro.core.expr import abstract_expr, col, title_expr
 from repro.core.p3sapp import p3sapp_dataset, run_conventional
-from repro.core.stages import abstract_stages, title_stages
 
 from .common import dataset_dirs, emit
 
 CACHE_DIR = EX.default_cache_dir() / "bench_preprocessing"
+
+
+def _expr_chain(d):
+    """The canonical cleaning chain in expression form, dedup-free so
+    every executor (and the cache) applies; dedup is cross-shard state
+    and thread-only."""
+    from repro.core.dataset import Dataset
+
+    keep = col("title").not_empty() & col("abstract").not_empty()
+    return (
+        Dataset.from_json_dirs([d])
+        .where(keep)
+        .transform(abstract=abstract_expr(), title=title_expr())
+        .where(keep)
+    )
 
 
 def run_scaling(
@@ -42,18 +57,9 @@ def run_scaling(
     cache: bool = False,
     executor: str | None = None,
 ) -> list[dict]:
-    from repro.core.dataset import Dataset
-
     rows = []
     for ds_id, d, gb in dataset_dirs(quick):
-        # The canonical cleaning chain, dedup-free so every executor (and
-        # the cache) applies; dedup is cross-shard state and thread-only.
-        ds = (
-            Dataset.from_json_dirs([d])
-            .dropna()
-            .apply(*(abstract_stages() + title_stages()))
-            .dropna()
-        )
+        ds = _expr_chain(d)
         frame_nodes, _ = P.split_plan(ds.plan)
         program = EX.compile_shard_program(
             P.optimize_plan(frame_nodes, ds.schema), optimize=True
@@ -99,7 +105,6 @@ def run_tokenize(
     cache: bool = False,
     executor: str | None = None,
 ) -> list[dict]:
-    from repro.core.dataset import Dataset
     from repro.data.batching import (
         effective_lengths,
         pad_token_fraction,
@@ -111,12 +116,7 @@ def run_tokenize(
     for ds_id, d, gb in dataset_dirs(quick):
 
         def chain():
-            ds = (
-                Dataset.from_json_dirs([d])
-                .dropna()
-                .apply(*(abstract_stages() + title_stages()))
-                .dropna()
-            )
+            ds = _expr_chain(d)
             return ds.cache(CACHE_DIR / "tokens") if cache else ds
 
         t0 = time.perf_counter()
@@ -126,12 +126,17 @@ def run_tokenize(
         )
         fit_wall = time.perf_counter() - t0
 
-        for mode in ("fixed", "bucketed"):
+        for mode in ("fixed", "bucketed", "paired"):
             pipe = chain().tokenize(tok, specs)
             if mode == "bucketed":
                 pipe = pipe.batched(
                     32, shuffle=False, drop_remainder=False,
                     bucket_by="encoder_tokens",
+                )
+            elif mode == "paired":
+                pipe = pipe.batched(
+                    32, shuffle=False, drop_remainder=False,
+                    bucket_by=("encoder_tokens", "decoder_tokens"),
                 )
             else:
                 pipe = pipe.batch(32, shuffle=False, drop_remainder=False)
@@ -164,6 +169,9 @@ def run_tokenize(
                 "tokens_per_s": round(payload_tokens / wall, 1) if wall else 0.0,
                 "pad_frac": round(
                     pad_token_fraction(batches, "encoder_tokens"), 4
+                ),
+                "pad_frac_decoder": round(
+                    pad_token_fraction(batches, "decoder_tokens"), 4
                 ),
                 "token_cache_hits": stats.get("token_cache_hits", 0),
                 "token_cache_misses": stats.get("token_cache_misses", 0),

@@ -1,11 +1,15 @@
-"""Quickstart: the paper's pipeline as one lazy Dataset plan.
+"""Quickstart: the paper's pipeline as one lazy Dataset plan, declared
+with composable column expressions.
 
 Generates a small synthetic CORE-style corpus, declares the P3SAPP flow
-(ingest → pre-clean → stage chain → records) as a single declarative chain,
-prints the optimized plan, compares against the conventional approach, and
-prints the paper's headline numbers for this scale — then carries the same
-plan into token space: ``fit_vocab`` (shard-merged word counts) →
-``tokenize`` → length-bucketed ``batched``, all inside the planner.
+(ingest → filter → per-column expressions → records) as a single
+declarative chain — ``where`` predicates run on raw byte buffers and are
+pushed toward the source, expression chains fuse per column — prints the
+optimized plan, compares against the conventional approach, and prints
+the paper's headline numbers for this scale. The same plan then carries
+into token space: ``fit_vocab`` (shard-merged word counts) → ``tokenize``
+→ length-bucketed ``batched`` (including the paired encoder/decoder 2-D
+grid), all inside the planner.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +17,8 @@ plan into token space: ``fit_vocab`` (shard-merged word counts) →
 import tempfile
 
 from repro.core.dataset import Dataset
-from repro.core.p3sapp import case_study_stages, record_match_accuracy, run_conventional
+from repro.core.expr import abstract_expr, col, title_expr
+from repro.core.p3sapp import record_match_accuracy, run_conventional
 from repro.data.batching import pad_token_fraction, seq2seq_specs
 from repro.data.synthetic import write_corpus
 
@@ -24,13 +29,17 @@ def main() -> None:
     print(f"corpus: {corpus}")
 
     # Nothing below executes until .execute(): the chain is a logical plan
-    # the planner fuses (per-column op chains) and reorders (filter pushdown).
+    # the planner fuses (per-column expression chains) and reorders
+    # (where-predicate pushdown). The expressions are the paper's Fig. 2/3
+    # workflows — compose your own with col("x").lower().regex_replace(...)
+    # / .where(col("x").word_count() >= n) for arbitrary scenarios.
+    keep = col("title").not_empty() & col("abstract").not_empty()
     ds = (
         Dataset.from_json_dirs([corpus])
-        .dropna()
+        .where(keep)
         .drop_duplicates()
-        .apply(*case_study_stages())
-        .dropna()
+        .transform(abstract=abstract_expr(), title=title_expr())
+        .where(keep)
     )
     print(ds.explain())
 
@@ -54,8 +63,10 @@ def main() -> None:
     # -- token space: the same plan, continued ------------------------------
     # fit_vocab is the Spark CountVectorizer-style fit half (per-shard
     # Counters, merged deterministically); tokenize/batched extend the
-    # plan to int32 device-ready batches. The cleaned frame above is
-    # memoized, so none of this re-reads or re-cleans the corpus.
+    # plan to int32 device-ready batches — the executors bulk-encode off
+    # the flat byte buffers (VocabTable), no per-word Python loop. The
+    # cleaned frame above is memoized, so none of this re-reads or
+    # re-cleans the corpus.
     tok = ds.fit_vocab(vocab_size=4000)
     specs = seq2seq_specs(max_abstract_len=64, max_title_len=12)
     fixed = list(
@@ -66,12 +77,23 @@ def main() -> None:
         .batched(32, shuffle=False, bucket_by="encoder_tokens")
         .iter_batches()
     )
+    paired = list(
+        ds.tokenize(tok, specs)
+        .batched(32, shuffle=False, bucket_by=("encoder_tokens", "decoder_tokens"))
+        .iter_batches()
+    )
     print(f"\nvocab: {len(tok)} words, {len(bucketed)} batches")
-    f_fixed = pad_token_fraction(fixed, "encoder_tokens")
-    f_bucket = pad_token_fraction(bucketed, "encoder_tokens")
-    print(f"pad fraction fixed max_len : {100 * f_fixed:.1f}%")
-    print(f"pad fraction bucketed      : {100 * f_bucket:.1f}%")
-    print(f"encoder shapes: {sorted({b['encoder_tokens'].shape for b in bucketed})}")
+    for name, batches in (("fixed", fixed), ("bucketed", bucketed), ("paired 2-D", paired)):
+        enc = pad_token_fraction(batches, "encoder_tokens")
+        dec = pad_token_fraction(batches, "decoder_tokens")
+        print(f"pad fraction {name:10s}: encoder {100 * enc:.1f}%  decoder {100 * dec:.1f}%")
+    shapes = sorted(
+        {
+            (b["encoder_tokens"].shape[1], b["decoder_tokens"].shape[1])
+            for b in paired
+        }
+    )
+    print(f"paired (encoder, decoder) widths: {shapes}")
 
 
 if __name__ == "__main__":

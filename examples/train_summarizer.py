@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs.p3sapp_summarizer import CONFIG, SMOKE
 from repro.core.dataset import Dataset
-from repro.core.p3sapp import case_study_stages
+from repro.core.expr import abstract_expr, col, title_expr
 from repro.data.batching import seq2seq_specs
 from repro.data.synthetic import write_corpus
 from repro.models.seq2seq import Seq2Seq
@@ -44,13 +44,15 @@ def main() -> None:
     write_corpus(corpus, total_bytes=int(args.corpus_mb * 1e6), n_files=8, seed=1)
 
     t0 = time.perf_counter()
-    # The full preprocessing flow is one lazy plan; nothing executes yet.
+    # The full preprocessing flow is one lazy plan of column expressions;
+    # nothing executes yet.
+    keep = col("title").not_empty() & col("abstract").not_empty()
     clean = (
         Dataset.from_json_dirs([corpus])
-        .dropna()
+        .where(keep)
         .drop_duplicates()
-        .apply(*case_study_stages())
-        .dropna()
+        .transform(abstract=abstract_expr(), title=title_expr())
+        .where(keep)
     )
     records, timings = clean.execute(optimize=True)
     print(f"P3SAPP preprocessing: {timings.cumulative:.2f}s, {len(records)} records")
@@ -60,13 +62,16 @@ def main() -> None:
     tok = clean.fit_vocab(vocab_size=cfg.vocab_size)
     train_ds, val_ds = clean.split(val_fraction=0.1, seed=0)
     specs = seq2seq_specs(cfg.max_abstract_len, cfg.max_title_len)
-    # ingest → dropna → apply → tokenize → batched → prefetch →
+    # ingest → where → transform → tokenize → batched → prefetch →
     # device_batches: the cleaned frame is memoized, so this reuses the
-    # pass above; length-bucketed assembly trims encoder padding to a
-    # small fixed shape set (one jit compile per bucket).
+    # pass above; paired 2-D length-bucketed assembly trims encoder *and*
+    # decoder padding to a small fixed grid (one jit compile per cell).
     loader = (
         train_ds.tokenize(tok, specs)
-        .batched(args.batch_size, shuffle=True, bucket_by="encoder_tokens")
+        .batched(
+            args.batch_size, shuffle=True,
+            bucket_by=("encoder_tokens", "decoder_tokens"),
+        )
         .prefetch(2)
         .device_batches(epochs=None)
     )

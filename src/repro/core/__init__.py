@@ -2,14 +2,17 @@
 
 Public API:
     Dataset                        — lazy plan: ingestion → device batches
+    col / lit / concat             — composable column expressions
+    abstract_expr / title_expr     — the paper's Fig. 2/3 workflows as expressions
     run_p3sapp / run_conventional  — Algorithm 1 / Algorithm 2 drivers
-    Pipeline, stages               — Spark-ML-style transformer chain
+    Pipeline, stages               — Spark-ML-style transformer chain (deprecated shims)
     ColumnarFrame                  — the DataFrame analogue
     AsyncLoader / ShardPool        — accelerator-overlap input pipeline
 """
 
 from .async_loader import AsyncLoader, ShardPool
 from .dataset import Dataset
+from .expr import abstract_expr, col, concat, lit, title_expr
 from .frame import ColumnarFrame
 from .p3sapp import (
     StageTimings,

@@ -160,6 +160,93 @@ def collapse_spaces(buf: np.ndarray) -> np.ndarray:
     return buf2[~(sp2 & next_sep)]
 
 
+def regex_sub(buf: np.ndarray, pattern: bytes, repl: bytes) -> np.ndarray:
+    """One compiled-regex substitution pass over the flat bytes.
+
+    Row-local as long as no match touches ``\\x00`` (the row separator).
+    Construction-time probing (:func:`regex_op`) rejects the common
+    separator-matching patterns (``.``, ``\\W``, ``[^a-z]``, …), and the
+    row count is re-verified here — exact enforcement, since a match that
+    crossed a separator would have to consume it."""
+    import re
+
+    raw = buf.tobytes()
+    out = re.sub(pattern, repl, raw)
+    if out.count(b"\x00") != raw.count(b"\x00"):
+        raise ValueError(
+            f"regex_replace({pattern.decode(errors='replace')!r}) matched the "
+            "row separator and would merge or split rows; exclude NUL from "
+            "the pattern (e.g. use [^a-z\\x01-\\x1f] style classes)"
+        )
+    return np.frombuffer(out, dtype=np.uint8).copy()
+
+
+# ---------------------------------------------------------------------------
+# Row-level reductions (predicates over flat buffers; no decode)
+# ---------------------------------------------------------------------------
+
+
+def row_lengths(buf: np.ndarray) -> np.ndarray:
+    """Per-row byte length *including* the trailing separator."""
+    sep_idx = np.flatnonzero(buf == ROW_SEP)
+    return np.diff(np.concatenate(([-1], sep_idx))).astype(np.int64)
+
+
+def row_nonempty(buf: np.ndarray) -> np.ndarray:
+    """Boolean mask of rows with at least one byte of payload."""
+    return row_lengths(buf) > 1
+
+
+def row_word_counts(buf: np.ndarray) -> np.ndarray:
+    """Per-row number of space-separated words (vectorized, no decode)."""
+    n = n_rows(buf)
+    counts = np.zeros(n, dtype=np.int64)
+    if buf.size == 0:
+        return counts
+    sep = buf == ROW_SEP
+    _, _, start_idx, _ = _segment_words(buf)
+    if start_idx.size:
+        row_of_byte = np.cumsum(sep, dtype=np.int64) - sep
+        np.add.at(counts, row_of_byte[start_idx], 1)
+    return counts
+
+
+def rows_containing(buf: np.ndarray, needle: bytes) -> np.ndarray:
+    """Boolean mask of rows whose payload contains ``needle`` (a literal
+    byte string without ``\\x00``, so a match can never span rows)."""
+    n = n_rows(buf)
+    mask = np.zeros(n, dtype=bool)
+    if not needle or buf.size == 0:
+        mask[:] = bool(n) and not needle
+        return mask
+    m = len(needle)
+    if m > buf.size:
+        return mask
+    pat = np.frombuffer(needle, dtype=np.uint8)
+    hit = buf[: buf.size - m + 1] == pat[0]
+    for j in range(1, m):
+        hit &= buf[j : buf.size - m + 1 + j] == pat[j]
+    pos = np.flatnonzero(hit)
+    if pos.size:
+        sep = buf == ROW_SEP
+        row_of_byte = np.cumsum(sep, dtype=np.int64) - sep
+        mask[row_of_byte[pos]] = True
+    return mask
+
+
+def concat_rows(bufs: Sequence[np.ndarray], sep: bytes = b" ") -> np.ndarray:
+    """Row-wise concatenation of equal-row-count flat buffers with ``sep``
+    between the parts (byte-level; rows never decode to str)."""
+    if not bufs:
+        raise ValueError("concat_rows needs at least one buffer")
+    split = [b.tobytes().split(b"\x00")[:-1] for b in bufs]
+    counts = {len(rows) for rows in split}
+    if len(counts) > 1:
+        raise ValueError(f"ragged concat inputs: row counts {sorted(counts)}")
+    joined = b"".join(sep.join(parts) + b"\x00" for parts in zip(*split))
+    return np.frombuffer(joined, dtype=np.uint8).copy()
+
+
 # ---------------------------------------------------------------------------
 # Word-level passes (segmented vector ops, no per-word Python)
 # ---------------------------------------------------------------------------
@@ -310,12 +397,13 @@ def remove_stopwords(buf: np.ndarray, stopwords: "WordSet") -> np.ndarray:
 
 @dataclass(frozen=True, eq=False)
 class Op:
-    kind: str  # "lut" | "span" | "replace" | "collapse" | "wordpred"
+    kind: str  # "lut" | "span" | "replace" | "collapse" | "wordpred" | "regex"
     lut: np.ndarray | None = None
     span: tuple[int, int] | None = None
     patterns: tuple[tuple[bytes, bytes], ...] | None = None
     pred: Callable | None = None  # (hashes|None, lengths) -> bool[n_words]
     needs_hashes: bool = False
+    regex: tuple[bytes, bytes] | None = None  # (pattern, repl)
 
 
 # Module-level predicates (picklable for the process-pool executor).
@@ -353,6 +441,30 @@ def wordpred_op(pred: Callable, needs_hashes: bool) -> Op:
     return Op("wordpred", pred=pred, needs_hashes=needs_hashes)
 
 
+def regex_op(pattern: str, repl: str) -> Op:
+    """Regex substitution op. The pattern must compile, must not be able to
+    match the row separator, and the replacement must not introduce one —
+    otherwise a substitution could merge or split rows. Probing here
+    catches the common separator-matchers (``.``, ``\\W``, ``[^...]``
+    classes) at plan-build time; :func:`regex_sub` re-verifies the row
+    count at execution, so exotic patterns that slip past the probes still
+    fail loudly instead of corrupting rows."""
+    import re
+
+    pat = pattern.encode("utf-8")
+    rep = repl.encode("utf-8")
+    rx = re.compile(pat)  # fail fast on bad patterns, at plan-build time
+    if b"\x00" in rep:
+        raise ValueError("regex replacement must not emit NUL (the row separator)")
+    for probe in (b"\x00", b"a\x00", b"\x00a", b"ab\x00cd"):
+        if any(b"\x00" in m.group() for m in rx.finditer(probe)):
+            raise ValueError(
+                f"regex pattern {pattern!r} can match NUL (the row separator) "
+                "and would merge or split rows; exclude \\x00 explicitly"
+            )
+    return Op("regex", regex=(pat, rep))
+
+
 def apply_op(buf: np.ndarray, op: Op) -> np.ndarray:
     if op.kind == "lut":
         return apply_lut(buf, op.lut)
@@ -364,6 +476,8 @@ def apply_op(buf: np.ndarray, op: Op) -> np.ndarray:
         return collapse_spaces(buf)
     if op.kind == "wordpred":
         return remove_words(buf, op.pred, needs_hashes=op.needs_hashes)
+    if op.kind == "regex":
+        return regex_sub(buf, *op.regex)
     raise ValueError(f"unknown op {op.kind}")
 
 
@@ -463,6 +577,13 @@ def op_signature(op: Op) -> bytes:
         return b"collapse"
     if op.kind == "wordpred":
         return b"wordpred:" + _pred_signature(op.pred)
+    if op.kind == "regex":
+        pat, rep = op.regex
+        return (
+            b"regex:"
+            + len(pat).to_bytes(4, "little") + pat
+            + len(rep).to_bytes(4, "little") + rep
+        )
     raise ValueError(f"unknown op {op.kind}")
 
 

@@ -3,22 +3,29 @@ shards to device-resident batches.
 
 Builder methods append logical plan nodes (:mod:`repro.core.plan`) instead
 of executing; terminal actions hand the plan to the planner, which merges
-and fuses stage chains, pushes filters/projections toward the source, and
-picks whole-frame or streaming per-shard execution. One chain covers the
-whole paper pipeline *and* the model-input path — cleaning, vocabulary
+``Project`` nodes and fuses their expression chains, pushes ``where``
+filters and projections toward the source, prunes dead derived columns,
+and picks whole-frame or streaming per-shard execution. One chain covers
+the whole paper pipeline *and* the model-input path — cleaning, vocabulary
 fitting, tokenization, and bucketed batch assembly all live inside the
-plan::
+plan, declared with composable column expressions
+(:mod:`repro.core.expr`)::
 
+    keep = col("title").not_empty() & col("abstract").not_empty()
     clean = (Dataset.from_json_dirs([corpus])
-             .dropna().drop_duplicates()
-             .apply(*case_study_stages())
-             .dropna())
+             .where(keep).drop_duplicates()
+             .transform(abstract=abstract_expr(), title=title_expr())
+             .where(keep))
     tok = clean.fit_vocab(vocab_size=8000)       # shard-merged word counts
     loader = (clean
-              .tokenize(tok, seq2seq_specs())    # encoded inside executors
-              .batched(32, bucket_by="encoder_tokens")  # length buckets
+              .tokenize(tok, seq2seq_specs())    # bulk-encoded inside executors
+              .batched(32, bucket_by=("encoder_tokens", "decoder_tokens"))
               .prefetch(2)
               .device_batches())
+
+The legacy ``Stage`` verbs still work — ``.apply(*stages)`` lowers each
+stage to its expression (:meth:`repro.core.stages.Stage.to_expr`), so both
+spellings build the identical plan.
 
 Terminals:
 
@@ -56,6 +63,7 @@ import numpy as np
 
 from ..data.batching import TokenSpec, batches as _array_batches, derive_buckets
 from ..data.tokenizer import WordTokenizer
+from . import expr as E
 from . import plan as P
 from .async_loader import AsyncLoader
 from .frame import ColumnarFrame
@@ -132,18 +140,80 @@ class Dataset:
     def drop_duplicates(self, subset: Sequence[str] | None = None) -> "Dataset":
         return self._derive(P.DropDuplicates(self._resolve_subset(subset)), self.schema)
 
+    def _check_expr_inputs(self, e, what: str, schema: Sequence[str]) -> None:
+        unknown = sorted(e.inputs() - set(schema))
+        if unknown:
+            raise KeyError(
+                f"{what} reads unknown columns {unknown}; schema is {list(schema)}"
+            )
+
+    def with_column(self, name: str, expression: E.Expr) -> "Dataset":
+        """Derive (or overwrite) one column from a composable expression::
+
+            ds.with_column("abstract", col("abstract").lower().strip_html())
+            ds.with_column("text", concat(col("title"), col("abstract")))
+        """
+        if not isinstance(expression, E.Expr):
+            raise TypeError(f"with_column() needs an expression, got {expression!r}")
+        self._check_expr_inputs(expression, f"with_column({name!r})", self.schema)
+        schema = list(self.schema)
+        if name not in schema:
+            schema.append(name)
+        return self._derive(P.Project(((name, expression),)), schema)
+
+    def transform(self, **expressions: E.Expr) -> "Dataset":
+        """Several :meth:`with_column` steps as one ``Project`` node;
+        entries evaluate in keyword order, each seeing the previous ones::
+
+            ds.transform(abstract=abstract_expr(), title=title_expr())
+        """
+        if not expressions:
+            return self
+        schema = list(self.schema)
+        entries = []
+        for name, e in expressions.items():
+            if not isinstance(e, E.Expr):
+                raise TypeError(f"transform({name}=...) needs an expression, got {e!r}")
+            self._check_expr_inputs(e, f"transform({name}=...)", schema)
+            entries.append((name, e))
+            if name not in schema:
+                schema.append(name)
+        return self._derive(P.Project(tuple(entries)), schema)
+
+    def where(self, pred: E.Pred) -> "Dataset":
+        """Keep rows satisfying a byte-buffer predicate::
+
+            ds.where(col("abstract").word_count() >= 5)
+            ds.where(col("title").not_empty() & ~col("title").contains("retracted"))
+
+        The optimizer pushes the filter back toward the source past any
+        ``Project`` that does not write a column it reads, so filtered
+        rows are never cleaned (generalized dropna pullback).
+        """
+        if isinstance(pred, E.WordCount):
+            raise TypeError("where() needs a predicate; compare word_count() to an int")
+        if not isinstance(pred, E.Pred):
+            raise TypeError(f"where() needs a predicate expression, got {pred!r}")
+        self._check_expr_inputs(pred, "where(...)", self.schema)
+        return self._derive(P.Filter(pred), self.schema)
+
     def apply(self, *stages: Stage) -> "Dataset":
+        """Deprecated shim: lower legacy ``Stage`` verbs to their
+        expressions (one ``Project`` node; see ``stages.Stage.to_expr``).
+        Byte-identical to composing the expressions directly."""
         if not stages:
             return self
         schema = list(self.schema)
+        entries = []
         for s in stages:
             if s.input_col not in schema:
                 raise KeyError(
                     f"stage {type(s).__name__} reads unknown column {s.input_col!r}"
                 )
+            entries.append((s.output_col, s.to_expr(E.col(s.input_col))))
             if s.output_col not in schema:
                 schema.append(s.output_col)
-        return self._derive(P.ApplyStages(tuple(stages)), schema)
+        return self._derive(P.Project(tuple(entries)), schema)
 
     def split(self, val_fraction: float = 0.1, seed: int = 0) -> tuple["Dataset", "Dataset"]:
         """(train, val) datasets over a deterministic row partition."""
@@ -259,6 +329,20 @@ class Dataset:
                     counts.update((t or "").split())
         return WordTokenizer.from_counts(counts, vocab_size)
 
+    def _resolve_bucket_widths(
+        self, spec: TokenSpec, widths: Sequence[int] | None, n_buckets: int
+    ) -> tuple[int, ...]:
+        if not widths:
+            return derive_buckets(spec.max_len, n_buckets)
+        resolved = tuple(sorted({int(b) for b in widths}))
+        if resolved[0] < 1:
+            raise ValueError(f"bucket widths must be >= 1, got {resolved}")
+        if resolved[-1] < spec.max_len:
+            # The last bucket must fit any row (rows were already
+            # truncated to max_len by encoding).
+            resolved = resolved + (spec.max_len,)
+        return resolved
+
     def batch(
         self,
         batch_size: int,
@@ -267,50 +351,69 @@ class Dataset:
         seed: int = 0,
         drop_remainder: bool = True,
         pad_to: int | None = None,
-        bucket_by: str | None = None,
-        buckets: Sequence[int] | None = None,
+        bucket_by: str | Sequence[str] | None = None,
+        buckets: Sequence | None = None,
         n_buckets: int = 4,
     ) -> "Dataset":
-        """Fixed-shape batches. With ``bucket_by`` (a token output name),
-        rows are grouped by payload length into a small fixed set of
-        bucket widths — ``buckets`` explicitly, else ``n_buckets`` linear
-        steps up to that spec's ``max_len`` — and the bucketed column is
-        sliced to its bucket width, so short rows stop paying full-width
-        padding while jit still sees a bounded shape set."""
+        """Fixed-shape batches. With ``bucket_by`` (a token output name, or
+        several), rows are grouped by payload length into a small fixed
+        set of bucket widths — ``buckets`` explicitly, else ``n_buckets``
+        linear steps up to each spec's ``max_len`` — and each bucketed
+        column is sliced to its bucket width, so short rows stop paying
+        full-width padding while jit still sees a bounded shape set.
+        ``bucket_by=("encoder_tokens", "decoder_tokens")`` builds the 2-D
+        grid (paired bucketing: decoder padding drops too); pass nested
+        ``buckets`` (one width list per column) to pin the grid."""
         tok = next((n for n in self._nodes if isinstance(n, P.Tokenize)), None)
         if tok is None:
             raise ValueError("batch() requires .tokenize(...) earlier in the chain")
         if buckets and bucket_by is None:
             raise ValueError(
-                "buckets=... needs bucket_by=<token output name>; without it "
-                "the batches would silently stay fixed-max_len"
+                "buckets=... needs bucket_by=<token output name(s)>; without "
+                "it the batches would silently stay fixed-max_len"
             )
-        resolved: tuple[int, ...] = ()
-        if bucket_by is not None:
-            spec = next((s for s in tok.specs if s.name == bucket_by), None)
-            if spec is None:
-                raise KeyError(
-                    f"bucket_by={bucket_by!r} is not a token output; "
-                    f"available: {[s.name for s in tok.specs]}"
-                )
-            if buckets:
-                resolved = tuple(sorted({int(b) for b in buckets}))
-                if resolved[0] < 1:
-                    raise ValueError(f"bucket widths must be >= 1, got {resolved}")
-                if resolved[-1] < spec.max_len:
-                    # The last bucket must fit any row (rows were already
-                    # truncated to max_len by encoding).
-                    resolved = resolved + (spec.max_len,)
+        bb: str | tuple[str, ...] | None = bucket_by if isinstance(
+            bucket_by, (str, type(None))
+        ) else tuple(bucket_by)
+        resolved: tuple = ()
+        if bb is not None:
+            from ..data.batching import bucket_columns
+
+            cols = bucket_columns(bb)
+            specs_by_name = {s.name: s for s in tok.specs}
+            for c in cols:
+                if c not in specs_by_name:
+                    raise KeyError(
+                        f"bucket_by={c!r} is not a token output; "
+                        f"available: {[s.name for s in tok.specs]}"
+                    )
+            if buckets and not isinstance(buckets[0], (int, np.integer)):
+                if len(buckets) != len(cols):
+                    raise ValueError(
+                        f"{len(buckets)} bucket width lists for "
+                        f"{len(cols)} bucket columns"
+                    )
+                per_col: Sequence[Sequence[int] | None] = list(buckets)
             else:
-                resolved = derive_buckets(spec.max_len, n_buckets)
+                if buckets and len(cols) != 1:
+                    raise ValueError(
+                        "flat buckets=... with several bucket_by columns; "
+                        "pass one width list per column"
+                    )
+                per_col = [buckets] + [None] * (len(cols) - 1)
+            widths = tuple(
+                self._resolve_bucket_widths(specs_by_name[c], w, n_buckets)
+                for c, w in zip(cols, per_col)
+            )
+            resolved = widths[0] if isinstance(bb, str) else widths
         node = P.Batch(
-            batch_size, shuffle, seed, drop_remainder, pad_to, bucket_by, resolved
+            batch_size, shuffle, seed, drop_remainder, pad_to, bb, resolved
         )
         return self._derive(node, self.schema)
 
     def batched(self, batch_size: int, **kwargs: Any) -> "Dataset":
         """Alias of :meth:`batch` — the bucketed-assembly verb
-        (``.batched(32, bucket_by="encoder_tokens")``)."""
+        (``.batched(32, bucket_by=("encoder_tokens", "decoder_tokens"))``)."""
         return self.batch(batch_size, **kwargs)
 
     def prefetch(self, prefetch: int = 2, *, sharding: Any = None) -> "Dataset":
@@ -445,7 +548,7 @@ class Dataset:
         else:
             suffix = owner._nodes[base_len:]
             seen_cleaning = any(
-                isinstance(n, P.ApplyStages) for n in owner._nodes[:base_len]
+                isinstance(n, P.Project) for n in owner._nodes[:base_len]
             )
             hit = P.continue_frame_plan(
                 base[0], base[1], suffix,

@@ -6,10 +6,12 @@ cleaning stages and *reuse of already-computed results* (``persist()``).
 This module supplies both behind the planner:
 
 * :class:`ShardProgram` — the per-shard physical program compiled from the
-  frame-level plan (parse → select/dropna[/dedup] → per-column op chains).
-  Programs are picklable: ops are plain descriptors
-  (:mod:`repro.core.bytesops`), so the same program runs in a thread or in
-  a worker process.
+  frame-level plan (parse → select/dropna/filter[/dedup] → per-column
+  compiled expressions). Programs are picklable: compiled expressions are
+  plain tuples over op descriptors (:mod:`repro.core.expr` /
+  :mod:`repro.core.bytesops`), so the same program runs in a thread or in
+  a worker process; ``filter`` steps evaluate predicates to row masks
+  straight off the flat buffers (no decode).
 * :class:`ThreadShardExecutor` — the existing in-thread path: a
   work-stealing :class:`~repro.core.async_loader.ShardPool` of reader
   threads, each running the full program per shard. Supports cross-shard
@@ -58,18 +60,37 @@ from typing import Any, Iterator, Sequence
 import numpy as np
 
 from . import bytesops as B
+from . import expr as E
 from . import ingest as ing
-from ..data.batching import TokenSpec, encode_rows
+from ..data.batching import TokenSpec, VocabTable, encode_flat, encode_rows
 from .async_loader import ShardPool
 from .frame import ColumnarFrame
-from .pipeline import ColumnPlan
+
+# Vocabulary lookup tables are pure functions of the vocabulary (keyed by
+# its content fingerprint); building one sorts the whole vocab, so reuse
+# it across shards instead of rebuilding per shard x spec.
+_VOCAB_TABLES: dict[str, VocabTable] = {}
+
+
+def _vocab_table(tp: "TokenPlan") -> VocabTable:
+    table = _VOCAB_TABLES.get(tp.vocab_fp)
+    if table is None:
+        if len(_VOCAB_TABLES) > 8:  # a worker only ever sees a few vocabs
+            _VOCAB_TABLES.clear()
+        table = VocabTable(tp.stoi)
+        _VOCAB_TABLES[tp.vocab_fp] = table
+    return table
 
 # ---------------------------------------------------------------------------
 # Shard program: the picklable per-shard physical plan
 # ---------------------------------------------------------------------------
 
 # Step kinds: ("select", cols) | ("dropna", cols) | ("dedup", cols)
-#           | ("clean", ((in_col, out_col, (op, ...)), ...))
+#           | ("project", ((out_col, compiled_expr), ...))
+#           | ("filter", compiled_pred)
+# Compiled expressions/predicates are the plain-tuple programs of
+# :mod:`repro.core.expr` — picklable, so the same program runs in a reader
+# thread or a worker process.
 Step = tuple[str, Any]
 
 
@@ -120,7 +141,6 @@ def compile_shard_program(
     only and rejected here.
     """
     from . import plan as P  # local import: plan.py imports this module
-    from .pipeline import compile_column_plans
 
     src = frame_nodes[0]
     if not isinstance(src, P.SourceJsonDirs):
@@ -133,9 +153,13 @@ def compile_shard_program(
             steps.append(("dropna", tuple(node.subset)))
         elif isinstance(node, P.DropDuplicates):
             steps.append(("dedup", tuple(node.subset)))
-        elif isinstance(node, P.ApplyStages):
-            plans = compile_column_plans(node.stages, optimize)
-            steps.append(("clean", tuple((i, o, tuple(ops)) for i, o, ops in plans)))
+        elif isinstance(node, P.Project):
+            steps.append(("project", E.compile_project(node.exprs, optimize)))
+        elif isinstance(node, P.Filter):
+            comp = E.compile_pred(node.pred)
+            if optimize:
+                comp = E.fuse_compiled(comp)
+            steps.append(("filter", comp))
         else:
             raise UnsupportedPlanError(f"not shard-executable: {node.describe()}")
     return ShardProgram(
@@ -155,20 +179,20 @@ def compile_shard_program(
 def _lineage_fingerprints(
     program: ShardProgram,
 ) -> tuple[dict[int, dict[str, str]], dict[str, str]] | None:
-    """Per-clean-step, per-output-column lineage fingerprints.
+    """Per-project-step, per-output-column lineage fingerprints.
 
-    A column's fingerprint at a clean step covers, in order, every earlier
-    step that can change that step's output buffer for a given shard: the
-    op chains along its own lineage and every row filter (``dropna``) —
-    including, transitively, the lineages of the filter's subset columns,
-    since *their* values decide which rows survive. Keys are step indices
-    into ``program.steps``: a column written by two clean steps gets a
-    *different* fingerprint at each, so the steps never alias one cache
-    entry. ``{}``-valued / missing columns are uncacheable (e.g. a
-    predicate that cannot be fingerprinted, such as a lambda). Returns
-    None when the whole program is uncacheable: ``dedup`` holds
-    cross-shard state, so a shard's output is not a pure function of
-    (shard bytes, program).
+    A column's fingerprint at a project step covers, in order, every
+    earlier step that can change that step's output buffer for a given
+    shard: the expressions along its own lineage and every row filter
+    (``dropna`` / ``filter``) — including, transitively, the lineages of
+    the columns the filter reads, since *their* values decide which rows
+    survive. Keys are step indices into ``program.steps``: a column
+    written by two project steps gets a *different* fingerprint at each,
+    so the steps never alias one cache entry. ``{}``-valued / missing
+    columns are uncacheable (e.g. a predicate that cannot be
+    fingerprinted, such as a lambda). Returns None when the whole program
+    is uncacheable: ``dedup`` holds cross-shard state, so a shard's output
+    is not a pure function of (shard bytes, program).
     """
     if program.has_dedup:
         return None
@@ -181,37 +205,63 @@ def _lineage_fingerprints(
     lineage: dict[str, bytes | None] = {
         f: b"src:" + f.encode() for f in program.fields
     }
+
+    def _row_filter_token(tag: bytes, cols: Sequence[str], extra: bytes) -> bytes | None:
+        """Token mixed into every column's lineage by a row filter; None
+        when any column the filter reads is poisoned."""
+        bases = [lineage.get(c, b"src:" + c.encode()) for c in cols]
+        if any(sig is None for sig in bases):
+            return None
+        return tag + extra + b"|" + b",".join(
+            c.encode() + b"=" + sig for c, sig in zip(cols, bases)
+        )
+
     per_step: dict[int, dict[str, str]] = {}
     for step_idx, (kind, arg) in enumerate(program.steps):
         if kind == "select":
             lineage = {c: lineage[c] for c in arg if c in lineage}
-        elif kind == "dropna":
-            subset = [lineage.get(c) for c in arg]
-            if any(sig is None for sig in subset):
-                # Unfingerprintable column decides the row set → nothing
-                # downstream is a pure function of fingerprintable state.
+        elif kind in ("dropna", "filter"):
+            if kind == "dropna":
+                token = _row_filter_token(b"dropna:", arg, b"")
+            else:
+                try:
+                    psig = E.compiled_signature(arg)
+                except B.UnfingerprintableOpError:
+                    token = None
+                else:
+                    token = _row_filter_token(
+                        b"filter:", sorted(E.compiled_inputs(arg)), psig
+                    )
+            if token is None:
+                # Unfingerprintable column/predicate decides the row set →
+                # nothing downstream is a pure function of fingerprintable
+                # state.
                 lineage = {c: None for c in lineage}
                 continue
-            token = b"dropna:" + b",".join(
-                c.encode() + b"=" + lineage.get(c, b"?") for c in arg
-            )
             lineage = {
                 c: h(sig + b"|" + token) if sig is not None else None
                 for c, sig in lineage.items()
             }
-        elif kind == "clean":
+        elif kind == "project":
             fps: dict[str, str] = {}
-            for in_col, out_col, ops in arg:
-                base = lineage.get(in_col, b"src:" + in_col.encode())
-                if base is None:
+            for out_col, comp in arg:
+                in_cols = sorted(E.compiled_inputs(comp))
+                bases = [lineage.get(c, b"src:" + c.encode()) for c in in_cols]
+                if any(b_ is None for b_ in bases):
                     lineage[out_col] = None
                     continue
                 try:
-                    ops_fp = B.ops_fingerprint(ops).encode()
+                    esig = E.compiled_signature(comp)
                 except B.UnfingerprintableOpError:
                     lineage[out_col] = None
                     continue
-                sig = h(base + b"|ops:" + ops_fp)
+                sig = h(
+                    b",".join(
+                        c.encode() + b"=" + b_ for c, b_ in zip(in_cols, bases)
+                    )
+                    + b"|expr:"
+                    + esig
+                )
                 lineage[out_col] = sig
                 fps[out_col] = sig.hex()
             per_step[step_idx] = fps
@@ -456,40 +506,32 @@ class GlobalDedup:
 # -- flat-buffer row ops (cleaned columns stay flat through the program) ----
 
 
-def _flat_row_lengths(buf: np.ndarray) -> np.ndarray:
-    """Per-row byte length *including* the trailing separator."""
-    sep_idx = np.flatnonzero(buf == B.ROW_SEP)
-    return np.diff(np.concatenate(([-1], sep_idx))).astype(np.int64)
-
-
-def _flat_nonempty_mask(buf: np.ndarray) -> np.ndarray:
-    return _flat_row_lengths(buf) > 1
-
-
 def _flat_take(buf: np.ndarray, keep: np.ndarray) -> np.ndarray:
     """Row-filter a flat buffer without decoding it."""
     if buf.size == 0 or keep.all():
         return buf
-    return buf[np.repeat(keep, _flat_row_lengths(buf))]
+    return buf[np.repeat(keep, B.row_lengths(buf))]
 
 
-def _run_clean_step(
-    frame: ColumnarFrame,
+def _run_project_step(
+    n: int,
     flat: dict[str, np.ndarray],
-    plans: Sequence[ColumnPlan],
+    lookup,
+    entries: Sequence[tuple[str, tuple]],
     cache: ShardCache | None,
     step_fps: dict[str, str] | None,
     digest: str | None,
     result: ShardResult,
 ) -> None:
-    """Run one stage-chain step over flat buffers, one cache lookup per
-    output column. A hit replaces the op chain with a disk read; a miss
-    (including a corrupt or row-count-stale entry) recomputes just that
-    column and rewrites the entry, so partially-changed plans only pay for
-    the columns whose lineage actually changed."""
-    n = len(frame)
+    """Run one Project step's compiled expressions over flat buffers, one
+    cache lookup per output column. A hit replaces the expression with a
+    disk read; a miss (including a corrupt or row-count-stale entry)
+    recomputes just that column and rewrites the entry, so
+    partially-changed plans only pay for the columns whose lineage
+    actually changed."""
     cacheable = cache is not None and step_fps is not None and digest is not None
-    for in_col, out_col, ops in plans:
+
+    for out_col, comp in entries:
         key = None
         if cacheable:
             fp = step_fps.get(out_col)
@@ -499,8 +541,7 @@ def _run_clean_step(
                 flat[out_col] = hit
                 result.cache_hits += 1
                 continue
-        src = flat[in_col] if in_col in flat else frame.flat(in_col)
-        out = B.apply_ops(src, list(ops))
+        out = E.eval_str(comp, lookup, n)
         flat[out_col] = out
         if key:
             # Uncacheable columns (key None) count neither hit nor miss:
@@ -618,6 +659,25 @@ def execute_program(
     """
     result = ShardResult(frame)
     flat: dict[str, np.ndarray] = {}
+    # Raw source columns flatten at most once; the memo is row-filtered in
+    # lockstep with ``flat`` so filters never force a re-flatten either.
+    src_flat: dict[str, np.ndarray] = {}
+
+    def lookup(c: str) -> np.ndarray:
+        if c in flat:
+            return flat[c]
+        if c not in src_flat:
+            src_flat[c] = frame.flat(c)
+        return src_flat[c]
+
+    def take_rows(keep: np.ndarray) -> None:
+        nonlocal frame, flat, src_flat
+        if keep.all():
+            return
+        frame = frame.take(keep)
+        flat = {c: _flat_take(b, keep) for c, b in flat.items()}
+        src_flat = {c: _flat_take(b, keep) for c, b in src_flat.items()}
+
     seen_clean = False
     for step_idx, (kind, arg) in enumerate(program.steps):
         t0 = time.perf_counter()
@@ -627,19 +687,20 @@ def execute_program(
                     frame = frame.ensure_column(c)
             frame = frame.select([c for c in arg if c in frame.columns])
             flat = {c: b for c, b in flat.items() if c in arg}
+            src_flat = {c: b for c, b in src_flat.items() if c in arg}
         elif kind == "dropna":
             keep = np.ones(len(frame), dtype=bool)
             for c in arg:
                 if c in flat:
-                    keep &= _flat_nonempty_mask(flat[c])
+                    keep &= B.row_nonempty(flat[c])
                 else:
                     col = frame[c]
                     keep &= np.array(
                         [v is not None and v != "" for v in col], dtype=bool
                     )
-            if not keep.all():
-                frame = frame.take(keep)
-                flat = {c: _flat_take(b, keep) for c, b in flat.items()}
+            take_rows(keep)
+        elif kind == "filter":
+            take_rows(E.eval_mask(arg, lookup, len(frame)))
         elif kind == "dedup":
             if dedups is None:
                 raise UnsupportedPlanError(
@@ -651,15 +712,16 @@ def execute_program(
             for c in dedups[step_idx].subset:
                 if c in flat:
                     frame = frame.ensure_column(c).with_flat(c, flat.pop(c))
+                    src_flat.pop(c, None)
             keep = dedups[step_idx].keep_mask(frame)
-            if not keep.all():
-                frame = frame.take(keep)
-                flat = {c: _flat_take(b, keep) for c, b in flat.items()}
-        elif kind == "clean":
+            take_rows(keep)
+        elif kind == "project":
             step_fps = col_fps.get(step_idx) if col_fps is not None else None
-            _run_clean_step(frame, flat, arg, cache, step_fps, digest, result)
+            _run_project_step(
+                len(frame), flat, lookup, arg, cache, step_fps, digest, result
+            )
         dt = time.perf_counter() - t0
-        if kind == "clean":
+        if kind == "project":
             seen_clean = True
             result.clean_s += dt
         elif seen_clean:
@@ -690,6 +752,7 @@ def execute_program(
         n = len(frame)
         if program.tokens is not None:
             tp = program.tokens
+            table = _vocab_table(tp)
             for spec in tp.specs:
                 key = None
                 if cache is not None and token_fps is not None and digest is not None:
@@ -701,9 +764,17 @@ def execute_program(
                             result.tokens[spec.name] = hit
                             result.token_cache_hits += 1
                             continue
-                arr = encode_rows(
-                    rows_of(spec.column), tp.stoi, spec.max_len, spec.add_start_end
-                )
+                if spec.column in flat:
+                    # Cleaned columns encode straight off their flat byte
+                    # buffer — no unflatten, no per-row Python.
+                    arr = encode_flat(
+                        flat[spec.column], table, spec.max_len, spec.add_start_end
+                    )
+                else:
+                    arr = encode_rows(
+                        rows_of(spec.column), tp.stoi, spec.max_len,
+                        spec.add_start_end, table=table,
+                    )
                 result.tokens[spec.name] = arr
                 if key:
                     result.token_cache_misses += 1

@@ -1,0 +1,652 @@
+"""Column-expression IR — the composable algebra behind the ``Dataset`` verbs.
+
+Spark's leverage (and Spark NLP's, which runs annotator DAGs *inside* the
+Catalyst plan) is not a fixed set of named transformers but an expression
+algebra the optimizer can see through. This module is that algebra for the
+flat-byte-buffer engine:
+
+* ``col("abstract")`` / ``lit("x")`` / ``concat(...)`` build **string
+  expressions**; chained methods (``.lower()``, ``.strip_html()``,
+  ``.regex_replace()``, ``.remove_stopwords()``, ``.min_word_len(n)``, …)
+  append vectorized byte ops (:mod:`repro.core.bytesops`).
+* ``.word_count() >= n``, ``.contains("x")``, ``.not_empty()`` and the
+  boolean operators ``& | ~`` build **predicates** that evaluate to row
+  masks straight off the flat buffers — filtered rows are never decoded.
+* Every node has a **structural signature** (stable across rebuilds,
+  sensitive to every parameter), so expression plans fingerprint exactly
+  like stage plans did and cache per column in the shard cache.
+
+Expressions are *descriptions*; :func:`compile_expr` / :func:`compile_pred`
+lower them to small picklable programs (plain tuples over ``bytesops.Op``
+descriptors) that run identically in the whole-frame executor, reader
+threads, and worker processes. ``Dataset.with_column/where/transform``
+lower to ``Project``/``Filter`` plan nodes carrying these expressions; the
+legacy ``Stage`` classes are shims that construct them (see
+:meth:`repro.core.stages.Stage.to_expr`).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from . import bytesops as B
+
+# The English stopword list used by Spark's StopWordsRemover is long; this
+# is the classic NLTK-ish core, sufficient for the case study and
+# configurable. (Canonical home; ``stages.ENGLISH_STOPWORDS`` re-exports.)
+ENGLISH_STOPWORDS: tuple[str, ...] = tuple(
+    (
+        "i me my myself we our ours ourselves you your yours yourself yourselves "
+        "he him his himself she her hers herself it its itself they them their "
+        "theirs themselves what which who whom this that these those am is are "
+        "was were be been being have has had having do does did doing a an the "
+        "and but if or because as until while of at by for with about against "
+        "between into through during before after above below to from up down in "
+        "out on off over under again further then once here there when where why "
+        "how all any both each few more most other some such no nor not only own "
+        "same so than too very s t can will just don should now"
+    ).split()
+)
+
+_DEFAULT_STOPSET = B.WordSet(ENGLISH_STOPWORDS)
+
+
+def _len_prefixed(parts: Sequence[bytes]) -> bytes:
+    return b"".join(len(p).to_bytes(8, "little") + p for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# String expressions
+# ---------------------------------------------------------------------------
+
+
+class Expr:
+    """Base string expression: one text column's worth of rows."""
+
+    # -- structural identity ------------------------------------------------
+    def signature(self) -> bytes:
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        return hashlib.blake2b(self.signature(), digest_size=16).hexdigest()
+
+    def inputs(self) -> set[str]:
+        """Free source columns this expression reads."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - convenience
+        return self.describe()
+
+    # -- string ops (each appends one vectorized byte op) -------------------
+    def _op(self, op: B.Op, label: str) -> "Expr":
+        return StrOp(self, op, label)
+
+    def lower(self) -> "Expr":
+        """ASCII lowercase (one 256-entry LUT pass)."""
+        return self._op(B.lut_op(B.LOWER_LUT), "lower()")
+
+    def strip_html(self) -> "Expr":
+        """Delete ``<...>`` spans (balanced per row)."""
+        return self._op(B.span_op("<", ">"), "strip_html()")
+
+    def strip_parens(self) -> "Expr":
+        """Delete ``(...)`` spans (balanced per row)."""
+        return self._op(B.span_op("(", ")"), "strip_parens()")
+
+    def expand_contractions(self) -> "Expr":
+        """Map English contractions (``won't`` → ``will not``, …)."""
+        return self._op(B.replace_op(B.CONTRACTIONS), "expand_contractions()")
+
+    def keep_letters(self) -> "Expr":
+        """Replace everything outside ``[a-z ]`` with a space."""
+        return self._op(B.lut_op(B.UNWANTED_LUT), "keep_letters()")
+
+    def collapse_spaces(self) -> "Expr":
+        """Collapse space runs; strip leading/trailing spaces per row."""
+        return self._op(B.collapse_op(), "collapse_spaces()")
+
+    def replace(self, patterns: Sequence[tuple[str, str]]) -> "Expr":
+        """Literal byte replacements, one C-speed pass per pattern."""
+        for p, r in patterns:
+            if "\x00" in p or "\x00" in r:
+                raise ValueError(
+                    "replace() patterns must not match or emit NUL "
+                    "(the row separator)"
+                )
+        pats = tuple((p.encode(), r.encode()) for p, r in patterns)
+        return self._op(B.replace_op(pats), f"replace({len(pats)} patterns)")
+
+    def regex_replace(self, pattern: str, repl: str = "") -> "Expr":
+        """Regex substitution (byte-level; must not touch the row separator)."""
+        return self._op(
+            B.regex_op(pattern, repl), f"regex_replace({pattern!r}, {repl!r})"
+        )
+
+    def remove_stopwords(
+        self, stopwords: Sequence[str] | B.WordSet | None = None
+    ) -> "Expr":
+        """Drop dictionary words (default: the English stopword core)."""
+        if stopwords is None:
+            words, n = _DEFAULT_STOPSET, len(ENGLISH_STOPWORDS)
+        elif isinstance(stopwords, B.WordSet):
+            words, n = stopwords, stopwords.k1.size
+        else:
+            words, n = B.WordSet(tuple(stopwords)), len(tuple(stopwords))
+        return self._op(
+            B.wordpred_op(partial(B.pred_stopword, words=words), needs_hashes=True),
+            f"remove_stopwords({n} words)",
+        )
+
+    def min_word_len(self, n: int) -> "Expr":
+        """Keep only words of at least ``n`` bytes."""
+        return self._op(
+            B.wordpred_op(partial(B.pred_short, threshold=int(n) - 1), needs_hashes=False),
+            f"min_word_len({int(n)})",
+        )
+
+    def remove_words(self, pred: Callable, needs_hashes: bool = True) -> "Expr":
+        """Escape hatch: drop words flagged by a custom predicate. Use a
+        module-level function (optionally via ``functools.partial``) to
+        keep the expression fingerprintable/cacheable."""
+        return self._op(
+            B.wordpred_op(pred, needs_hashes=needs_hashes),
+            f"remove_words({getattr(pred, '__qualname__', repr(pred))})",
+        )
+
+    # -- predicates ---------------------------------------------------------
+    def not_empty(self) -> "Pred":
+        """True for rows with non-empty payload (the dropna predicate)."""
+        return NotEmpty(self)
+
+    def contains(self, needle: str) -> "Pred":
+        """True for rows containing the literal ``needle``."""
+        return Contains(self, needle)
+
+    def word_count(self) -> "WordCount":
+        """Per-row word count; compare it (``>= n`` …) to get a predicate."""
+        return WordCount(self)
+
+
+@dataclass(frozen=True)
+class Col(Expr):
+    name: str
+
+    def signature(self) -> bytes:
+        return b"col:" + self.name.encode()
+
+    def inputs(self) -> set[str]:
+        return {self.name}
+
+    def describe(self) -> str:
+        return f"col({self.name!r})"
+
+
+@dataclass(frozen=True)
+class Lit(Expr):
+    value: str
+
+    def __post_init__(self):
+        if "\x00" in self.value:
+            raise ValueError("lit() values must not include NUL (the row separator)")
+
+    def signature(self) -> bytes:
+        return b"lit:" + self.value.encode()
+
+    def inputs(self) -> set[str]:
+        return set()
+
+    def describe(self) -> str:
+        return f"lit({self.value!r})"
+
+
+@dataclass(frozen=True, eq=False)
+class StrOp(Expr):
+    input: Expr
+    op: B.Op
+    label: str
+
+    def signature(self) -> bytes:
+        return _len_prefixed([self.input.signature(), b"op:" + B.op_signature(self.op)])
+
+    def inputs(self) -> set[str]:
+        return self.input.inputs()
+
+    def describe(self) -> str:
+        return f"{self.input.describe()}.{self.label}"
+
+
+@dataclass(frozen=True, eq=False)
+class Concat(Expr):
+    parts: tuple[Expr, ...]
+    sep: str = " "
+
+    def __post_init__(self):
+        if "\x00" in self.sep:
+            raise ValueError("concat() sep must not include NUL (the row separator)")
+
+    def signature(self) -> bytes:
+        return b"concat:" + self.sep.encode() + b":" + _len_prefixed(
+            [p.signature() for p in self.parts]
+        )
+
+    def inputs(self) -> set[str]:
+        out: set[str] = set()
+        for p in self.parts:
+            out |= p.inputs()
+        return out
+
+    def describe(self) -> str:
+        inner = ", ".join(p.describe() for p in self.parts)
+        return f"concat({inner}, sep={self.sep!r})"
+
+
+def col(name: str) -> Col:
+    """Reference a source (or previously derived) column."""
+    return Col(name)
+
+
+def lit(value: str) -> Lit:
+    """A per-row constant (for use inside :func:`concat`)."""
+    return Lit(str(value))
+
+
+def concat(*parts: Expr | str, sep: str = " ") -> Concat:
+    """Row-wise concatenation of expressions; plain strings become
+    :func:`lit` constants. At least one part must read a column."""
+    exprs = tuple(p if isinstance(p, Expr) else Lit(str(p)) for p in parts)
+    if not exprs:
+        raise ValueError("concat() needs at least one part")
+    if not any(e.inputs() for e in exprs):
+        raise ValueError("concat() of literals only; reference at least one col()")
+    return Concat(exprs, sep)
+
+
+# ---------------------------------------------------------------------------
+# Predicates (row masks)
+# ---------------------------------------------------------------------------
+
+
+class Pred:
+    """Boolean row predicate over string expressions."""
+
+    def signature(self) -> bytes:
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        return hashlib.blake2b(self.signature(), digest_size=16).hexdigest()
+
+    def inputs(self) -> set[str]:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - convenience
+        return self.describe()
+
+    def __and__(self, other: "Pred") -> "Pred":
+        return BoolOp("and", self, other)
+
+    def __or__(self, other: "Pred") -> "Pred":
+        return BoolOp("or", self, other)
+
+    def __invert__(self) -> "Pred":
+        return NotOp(self)
+
+
+@dataclass(frozen=True, eq=False)
+class NotEmpty(Pred):
+    input: Expr
+
+    def signature(self) -> bytes:
+        return b"notempty:" + self.input.signature()
+
+    def inputs(self) -> set[str]:
+        return self.input.inputs()
+
+    def describe(self) -> str:
+        return f"{self.input.describe()}.not_empty()"
+
+
+@dataclass(frozen=True, eq=False)
+class Contains(Pred):
+    input: Expr
+    needle: str
+
+    def __post_init__(self):
+        if "\x00" in self.needle:
+            raise ValueError("contains() needle must not include NUL")
+
+    def signature(self) -> bytes:
+        return b"contains:" + self.needle.encode() + b":" + self.input.signature()
+
+    def inputs(self) -> set[str]:
+        return self.input.inputs()
+
+    def describe(self) -> str:
+        return f"{self.input.describe()}.contains({self.needle!r})"
+
+
+@dataclass(frozen=True, eq=False)
+class WordCount:
+    """Per-row word count of a string expression. Not itself a predicate —
+    compare it against an int to get one."""
+
+    input: Expr
+
+    def describe(self) -> str:
+        return f"{self.input.describe()}.word_count()"
+
+    def _cmp(self, op: str, n: Any) -> "Compare":
+        if not isinstance(n, (int, np.integer)):
+            raise TypeError(f"word_count() compares against an int, got {n!r}")
+        return Compare(self, op, int(n))
+
+    def __ge__(self, n): return self._cmp(">=", n)
+    def __gt__(self, n): return self._cmp(">", n)
+    def __le__(self, n): return self._cmp("<=", n)
+    def __lt__(self, n): return self._cmp("<", n)
+    def __eq__(self, n): return self._cmp("==", n)  # type: ignore[override]
+    def __ne__(self, n): return self._cmp("!=", n)  # type: ignore[override]
+
+
+_CMP_FNS = {
+    ">=": np.greater_equal,
+    ">": np.greater,
+    "<=": np.less_equal,
+    "<": np.less,
+    "==": np.equal,
+    "!=": np.not_equal,
+}
+
+
+@dataclass(frozen=True, eq=False)
+class Compare(Pred):
+    left: WordCount
+    op: str
+    right: int
+
+    def signature(self) -> bytes:
+        return (
+            b"wc" + self.op.encode() + str(self.right).encode()
+            + b":" + self.left.input.signature()
+        )
+
+    def inputs(self) -> set[str]:
+        return self.left.input.inputs()
+
+    def describe(self) -> str:
+        return f"({self.left.describe()} {self.op} {self.right})"
+
+
+@dataclass(frozen=True, eq=False)
+class BoolOp(Pred):
+    kind: str  # "and" | "or"
+    left: Pred
+    right: Pred
+
+    def signature(self) -> bytes:
+        return self.kind.encode() + b":" + _len_prefixed(
+            [self.left.signature(), self.right.signature()]
+        )
+
+    def inputs(self) -> set[str]:
+        return self.left.inputs() | self.right.inputs()
+
+    def describe(self) -> str:
+        sym = "&" if self.kind == "and" else "|"
+        return f"({self.left.describe()} {sym} {self.right.describe()})"
+
+
+@dataclass(frozen=True, eq=False)
+class NotOp(Pred):
+    input: Pred
+
+    def signature(self) -> bytes:
+        return b"not:" + self.input.signature()
+
+    def inputs(self) -> set[str]:
+        return self.input.inputs()
+
+    def describe(self) -> str:
+        return f"~{self.input.describe()}"
+
+
+# ---------------------------------------------------------------------------
+# Canonical case-study expressions (paper Fig. 2 / Fig. 3, expression form)
+# ---------------------------------------------------------------------------
+
+
+def clean_text(e: Expr) -> Expr:
+    """The paper's §4.1.1-§4.1.3 character cleanup as one chain."""
+    return (
+        e.lower()
+        .strip_html()
+        .strip_parens()
+        .expand_contractions()
+        .keep_letters()
+        .collapse_spaces()
+    )
+
+
+def abstract_expr(column: str = "abstract", threshold: int = 1) -> Expr:
+    """Paper Fig. 2: abstracts are the model *feature* → full cleaning."""
+    return clean_text(col(column)).remove_stopwords().min_word_len(threshold + 1)
+
+
+def title_expr(column: str = "title", threshold: int = 1) -> Expr:
+    """Paper Fig. 3: titles are the model *target* → keep stopwords."""
+    return clean_text(col(column)).min_word_len(threshold + 1)
+
+
+# ---------------------------------------------------------------------------
+# Compilation: expressions → picklable flat-buffer programs
+# ---------------------------------------------------------------------------
+#
+# Compiled string forms (plain tuples; Op descriptors are picklable):
+#   ("chain", in_col, (op, ...))           ops applied to one column's buffer
+#   ("concat", sep_bytes, (compiled, ...)) row-wise concat of parts
+#   ("lit", value_str)                     per-row constant
+# Compiled predicate forms:
+#   ("nonempty", compiled) | ("wc", cmp, n, compiled)
+#   | ("contains", needle_bytes, compiled)
+#   | ("and", p, p) | ("or", p, p) | ("not", p)
+
+
+def compile_expr(e: Expr) -> tuple:
+    ops: list[B.Op] = []
+    node = e
+    while isinstance(node, StrOp):
+        ops.append(node.op)
+        node = node.input
+    ops.reverse()
+    if isinstance(node, Col):
+        return ("chain", node.name, tuple(ops))
+    if isinstance(node, Lit):
+        base: tuple = ("lit", node.value)
+    elif isinstance(node, Concat):
+        base = ("concat", node.sep.encode(), tuple(compile_expr(p) for p in node.parts))
+    else:
+        raise TypeError(f"cannot compile expression root {node!r}")
+    if not ops:
+        return base
+    # ops over a concat/lit root: wrap as a chain with a non-column source
+    return ("wrap", base, tuple(ops))
+
+
+def compile_pred(p: Pred) -> tuple:
+    if isinstance(p, NotEmpty):
+        return ("nonempty", compile_expr(p.input))
+    if isinstance(p, Contains):
+        return ("contains", p.needle.encode(), compile_expr(p.input))
+    if isinstance(p, Compare):
+        return ("wc", p.op, p.right, compile_expr(p.left.input))
+    if isinstance(p, BoolOp):
+        return (p.kind, compile_pred(p.left), compile_pred(p.right))
+    if isinstance(p, NotOp):
+        return ("not", compile_pred(p.input))
+    raise TypeError(f"cannot compile predicate {p!r}")
+
+
+def fuse_compiled(comp: tuple) -> tuple:
+    """Catalyst-style op fusion inside a compiled expression (exact)."""
+    kind = comp[0]
+    if kind == "chain":
+        return ("chain", comp[1], tuple(B.fuse_ops(list(comp[2]))))
+    if kind == "wrap":
+        return ("wrap", fuse_compiled(comp[1]), tuple(B.fuse_ops(list(comp[2]))))
+    if kind == "concat":
+        return ("concat", comp[1], tuple(fuse_compiled(c) for c in comp[2]))
+    if kind == "nonempty":
+        return ("nonempty", fuse_compiled(comp[1]))
+    if kind == "contains":
+        return ("contains", comp[1], fuse_compiled(comp[2]))
+    if kind == "wc":
+        return ("wc", comp[1], comp[2], fuse_compiled(comp[3]))
+    if kind in ("and", "or"):
+        return (kind, fuse_compiled(comp[1]), fuse_compiled(comp[2]))
+    if kind == "not":
+        return ("not", fuse_compiled(comp[1]))
+    return comp
+
+
+def compiled_inputs(comp: tuple) -> set[str]:
+    kind = comp[0]
+    if kind == "chain":
+        return {comp[1]}
+    if kind == "lit":
+        return set()
+    if kind == "wrap":
+        return compiled_inputs(comp[1])
+    if kind == "concat":
+        out: set[str] = set()
+        for c in comp[2]:
+            out |= compiled_inputs(c)
+        return out
+    # predicate forms
+    if kind == "nonempty":
+        return compiled_inputs(comp[1])
+    if kind in ("contains",):
+        return compiled_inputs(comp[2])
+    if kind == "wc":
+        return compiled_inputs(comp[3])
+    if kind in ("and", "or"):
+        return compiled_inputs(comp[1]) | compiled_inputs(comp[2])
+    if kind == "not":
+        return compiled_inputs(comp[1])
+    raise ValueError(f"unknown compiled form {kind!r}")
+
+
+def compiled_signature(comp: tuple) -> bytes:
+    """Stable byte signature of a compiled expression/predicate — the unit
+    the shard cache keys on. Raises
+    :class:`~repro.core.bytesops.UnfingerprintableOpError` for ops whose
+    behavior cannot be captured (lambda predicates)."""
+    kind = comp[0]
+    if kind == "chain":
+        return b"chain:" + comp[1].encode() + b":" + _len_prefixed(
+            [B.op_signature(op) for op in comp[2]]
+        )
+    if kind == "lit":
+        return b"lit:" + comp[1].encode()
+    if kind == "wrap":
+        return b"wrap:" + _len_prefixed(
+            [compiled_signature(comp[1])] + [B.op_signature(op) for op in comp[2]]
+        )
+    if kind == "concat":
+        return b"concat:" + comp[1] + b":" + _len_prefixed(
+            [compiled_signature(c) for c in comp[2]]
+        )
+    if kind == "nonempty":
+        return b"nonempty:" + compiled_signature(comp[1])
+    if kind == "contains":
+        return b"contains:" + comp[1] + b":" + compiled_signature(comp[2])
+    if kind == "wc":
+        return b"wc" + comp[1].encode() + str(comp[2]).encode() + b":" + compiled_signature(comp[3])
+    if kind in ("and", "or"):
+        return kind.encode() + b":" + _len_prefixed(
+            [compiled_signature(comp[1]), compiled_signature(comp[2])]
+        )
+    if kind == "not":
+        return b"not:" + compiled_signature(comp[1])
+    raise ValueError(f"unknown compiled form {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Evaluation over flat buffers
+# ---------------------------------------------------------------------------
+
+
+def eval_str(comp: tuple, lookup: Callable[[str], np.ndarray], n_rows: int) -> np.ndarray:
+    """Evaluate a compiled string expression to a flat byte buffer.
+    ``lookup(col)`` returns the current flat buffer of a column."""
+    kind = comp[0]
+    if kind == "chain":
+        return B.apply_ops(lookup(comp[1]), list(comp[2]))
+    if kind == "lit":
+        return B.flatten([comp[1]] * n_rows)
+    if kind == "wrap":
+        return B.apply_ops(eval_str(comp[1], lookup, n_rows), list(comp[2]))
+    if kind == "concat":
+        parts = [eval_str(c, lookup, n_rows) for c in comp[2]]
+        return B.concat_rows(parts, comp[1])
+    raise ValueError(f"unknown compiled form {kind!r}")
+
+
+def eval_mask(comp: tuple, lookup: Callable[[str], np.ndarray], n_rows: int) -> np.ndarray:
+    """Evaluate a compiled predicate to a boolean row mask — straight off
+    flat byte buffers, no row ever decodes."""
+    kind = comp[0]
+    if kind == "nonempty":
+        return B.row_nonempty(eval_str(comp[1], lookup, n_rows))
+    if kind == "contains":
+        return B.rows_containing(eval_str(comp[2], lookup, n_rows), comp[1])
+    if kind == "wc":
+        counts = B.row_word_counts(eval_str(comp[3], lookup, n_rows))
+        return _CMP_FNS[comp[1]](counts, comp[2])
+    if kind == "and":
+        return eval_mask(comp[1], lookup, n_rows) & eval_mask(comp[2], lookup, n_rows)
+    if kind == "or":
+        return eval_mask(comp[1], lookup, n_rows) | eval_mask(comp[2], lookup, n_rows)
+    if kind == "not":
+        return ~eval_mask(comp[1], lookup, n_rows)
+    raise ValueError(f"unknown compiled form {kind!r}")
+
+
+def compile_project(
+    entries: Sequence[tuple[str, Expr]], optimize: bool
+) -> tuple[tuple[str, tuple], ...]:
+    """Compile a Project node's ``(out_col, expr)`` entries.
+
+    Entries evaluate *sequentially* (entry k sees the columns entries < k
+    wrote — Spark ``withColumn`` chaining). With ``optimize``, adjacent
+    in-place chains over the same column merge into one op chain and every
+    chain's ops are fused (exact, see ``bytesops.fuse_ops``); without it,
+    each entry's ops run one by one (the paper-faithful executor).
+    """
+    out: list[tuple[str, tuple]] = []
+    for out_col, e in entries:
+        comp = compile_expr(e)
+        if (
+            optimize
+            and out
+            and comp[0] == "chain"
+            and comp[1] == out_col  # in-place over its own column
+            and out[-1][0] == out_col
+            and out[-1][1][0] == "chain"
+        ):
+            prev_col, prev = out[-1]
+            out[-1] = (out_col, ("chain", prev[1], prev[2] + comp[2]))
+        else:
+            out.append((out_col, comp))
+    if optimize:
+        out = [(c, fuse_compiled(comp)) for c, comp in out]
+    return tuple(out)

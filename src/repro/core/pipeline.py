@@ -8,11 +8,13 @@ Fidelity to the paper (Algorithm 1, steps 11-14):
   that contains only transformers),
 * ``PipelineModel.transform`` runs all stages (step 14).
 
-Both classes are thin adapters over the lazy plan machinery: a
+Both classes are thin adapters over the expression layer: a
 ``PipelineModel`` compiles its stages into per-column op plans
-(``column_plans``) and hands them to :func:`run_column_plans`, the same
-physical executor the ``Dataset`` planner (:mod:`repro.core.plan`) uses for
-its ``ApplyStages`` nodes.
+(``column_plans``; each stage's ops derive from its expression, see
+:meth:`repro.core.stages.Stage.to_expr`) and hands them to
+:func:`run_column_plans`. The ``Dataset`` planner (:mod:`repro.core.plan`)
+runs the same expressions through its ``Project`` nodes, so both paths are
+byte-identical by construction.
 
 Execution model — the P3SAPP speedup: per *column* we flatten once into a
 byte buffer, run that column's stage chain as vectorized passes, and

@@ -6,14 +6,18 @@ This module is that engine for the full path — ingestion to device batches,
 not just the cleaning segment:
 
 * **Logical plan** — a linear sequence of immutable nodes
-  (``SourceJsonDirs → Select/DropNA/DropDuplicates/ApplyStages/Split →
+  (``SourceJsonDirs → Select/DropNA/DropDuplicates/Project/Filter/Split →
   Tokenize → Batch → Prefetch``) built by :class:`repro.core.dataset.Dataset`.
+  ``Project`` carries ``(out_col, expression)`` entries and ``Filter`` a
+  row predicate — both from the column-expression IR
+  (:mod:`repro.core.expr`); the legacy ``Stage`` verbs lower to them.
 * **Optimizer** (:func:`optimize_plan`) — Catalyst-style rewrites:
-  adjacent ``ApplyStages`` merge into one stage chain (whose per-column op
-  lists then go through ``bytesops.fuse_ops``), adjacent ``DropNA`` merge,
-  a ``DropNA`` commutes backward past an ``ApplyStages`` that does not
-  write its subset (dropped rows are never cleaned), and a source-level
-  liveness pass projects away columns nothing downstream reads.
+  adjacent ``Project`` nodes merge (their in-place chains then fuse via
+  ``bytesops.fuse_ops``), adjacent ``DropNA``/``Filter`` nodes merge, a
+  ``DropNA`` or ``Filter`` commutes backward past a ``Project`` that does
+  not write any column it reads (dropped rows are never cleaned), derived
+  columns nothing downstream reads are pruned, and a source-level liveness
+  pass projects away columns nothing downstream reads.
 * **Physical executors** — :func:`execute_frame_plan` runs the frame-level
   prefix whole-frame with the paper's stage-timing attribution
   (:class:`StageTimings`), while :func:`stream_batches` runs the same plan
@@ -45,10 +49,9 @@ from ..data.batching import (
     split_indices,
 )
 from . import bytesops as B
+from . import expr as E
 from . import ingest as ing
 from .frame import ColumnarFrame
-from .pipeline import ColumnPlan, compile_column_plans, run_column_plans
-from .stages import Stage
 
 
 @dataclass
@@ -135,13 +138,29 @@ class DropDuplicates(PlanNode):
         return f"DropDuplicates({list(self.subset)})"
 
 
-@dataclass(frozen=True)
-class ApplyStages(PlanNode):
-    stages: tuple[Stage, ...]
+@dataclass(frozen=True, eq=False)
+class Project(PlanNode):
+    """Sequential ``(out_col, expression)`` entries — entry k sees the
+    columns entries < k wrote (Spark ``withColumn`` chaining)."""
+
+    exprs: tuple[tuple[str, E.Expr], ...]
+
+    def written(self) -> set[str]:
+        return {out for out, _ in self.exprs}
 
     def describe(self) -> str:
-        names = [type(s).__name__ + f"[{s.input_col}->{s.output_col}]" for s in self.stages]
-        return f"ApplyStages({', '.join(names)})"
+        inner = ", ".join(f"{out}={e.describe()}" for out, e in self.exprs)
+        return f"Project({inner})"
+
+
+@dataclass(frozen=True, eq=False)
+class Filter(PlanNode):
+    """Row filter by a byte-buffer predicate (``Dataset.where``)."""
+
+    pred: E.Pred
+
+    def describe(self) -> str:
+        return f"Filter({self.pred.describe()})"
 
 
 @dataclass(frozen=True)
@@ -162,7 +181,13 @@ class Tokenize(PlanNode):
     specs: tuple[TokenSpec, ...]
 
     def describe(self) -> str:
-        return f"Tokenize({[s.column + '->' + s.name for s in self.specs]})"
+        parts = [
+            f"{s.column}->{s.name}[max_len={s.max_len}"
+            + (", start_end" if s.add_start_end else "")
+            + "]"
+            for s in self.specs
+        ]
+        return f"Tokenize({', '.join(parts)})"
 
 
 @dataclass(frozen=True)
@@ -173,17 +198,28 @@ class Batch(PlanNode):
     drop_remainder: bool = True
     pad_to: int | None = None
     # Length-bucketed assembly: rows grouped by the payload length of the
-    # ``bucket_by`` token column into the fixed ``buckets`` widths.
-    bucket_by: str | None = None
-    buckets: tuple[int, ...] = ()
+    # ``bucket_by`` token column(s) into the fixed ``buckets`` widths —
+    # one width list for a single column, one list per column (a 2-D
+    # grid) for paired encoder/decoder bucketing.
+    bucket_by: str | tuple[str, ...] | None = None
+    buckets: tuple = ()
 
     def describe(self) -> str:
         base = (
             f"Batch(size={self.batch_size}, shuffle={self.shuffle}, "
-            f"drop_remainder={self.drop_remainder}, pad_to={self.pad_to}"
+            f"seed={self.seed}, drop_remainder={self.drop_remainder}, "
+            f"pad_to={self.pad_to}"
         )
         if self.bucket_by is not None:
-            base += f", bucket_by={self.bucket_by}, buckets={list(self.buckets)}"
+            bb = (
+                self.bucket_by
+                if isinstance(self.bucket_by, str)
+                else list(self.bucket_by)
+            )
+            bk = [
+                list(b) if isinstance(b, tuple) else b for b in self.buckets
+            ]
+            base += f", bucket_by={bb}, buckets={bk}"
         return base + ")"
 
 
@@ -196,7 +232,9 @@ class Prefetch(PlanNode):
         return f"Prefetch(depth={self.prefetch}, sharding={self.sharding is not None})"
 
 
-FRAME_NODES = (SourceJsonDirs, SourceFrame, Select, DropNA, DropDuplicates, ApplyStages, Split)
+FRAME_NODES = (
+    SourceJsonDirs, SourceFrame, Select, DropNA, DropDuplicates, Project, Filter, Split
+)
 ARRAY_NODES = (Tokenize, Batch, Prefetch)
 
 
@@ -216,19 +254,24 @@ def split_plan(nodes: Sequence[PlanNode]) -> tuple[list[PlanNode], list[PlanNode
 # ---------------------------------------------------------------------------
 
 
-def _stage_written_cols(node: ApplyStages) -> set[str]:
-    return {s.output_col for s in node.stages}
+def _filter_read_cols(node: PlanNode) -> set[str]:
+    if isinstance(node, DropNA):
+        return set(node.subset)
+    assert isinstance(node, Filter)
+    return node.pred.inputs()
 
 
 def _merge_adjacent(nodes: list[PlanNode]) -> list[PlanNode]:
     out: list[PlanNode] = []
     for node in nodes:
         prev = out[-1] if out else None
-        if isinstance(node, ApplyStages) and isinstance(prev, ApplyStages):
-            out[-1] = ApplyStages(prev.stages + node.stages)
+        if isinstance(node, Project) and isinstance(prev, Project):
+            out[-1] = Project(prev.exprs + node.exprs)
         elif isinstance(node, DropNA) and isinstance(prev, DropNA):
             merged = prev.subset + tuple(f for f in node.subset if f not in prev.subset)
             out[-1] = DropNA(merged)
+        elif isinstance(node, Filter) and isinstance(prev, Filter):
+            out[-1] = Filter(prev.pred & node.pred)
         elif isinstance(node, Select) and isinstance(prev, Select):
             out[-1] = node  # the later projection wins
         else:
@@ -237,17 +280,19 @@ def _merge_adjacent(nodes: list[PlanNode]) -> list[PlanNode]:
 
 
 def _pull_filters_back(nodes: list[PlanNode]) -> list[PlanNode]:
-    """DropNA commutes backward past an ApplyStages that does not write any
-    of its subset columns — dropped rows are then never flattened/cleaned."""
+    """A row filter (``DropNA`` or ``Filter``) commutes backward past a
+    ``Project`` that does not write any column the filter reads — dropped
+    rows are then never flattened/cleaned. This generalizes the original
+    dropna pullback to arbitrary ``where`` predicates."""
     changed = True
     while changed:
         changed = False
         for i in range(len(nodes) - 1):
             a, b = nodes[i], nodes[i + 1]
             if (
-                isinstance(a, ApplyStages)
-                and isinstance(b, DropNA)
-                and not (set(b.subset) & _stage_written_cols(a))
+                isinstance(a, Project)
+                and isinstance(b, (DropNA, Filter))
+                and not (_filter_read_cols(b) & a.written())
             ):
                 nodes[i], nodes[i + 1] = b, a
                 changed = True
@@ -255,27 +300,54 @@ def _pull_filters_back(nodes: list[PlanNode]) -> list[PlanNode]:
     return nodes
 
 
-def _project_source(nodes: list[PlanNode], final_schema: Sequence[str]) -> list[PlanNode]:
-    """Liveness pass: narrow the JSON source to the columns actually read."""
-    src = nodes[0]
-    if not isinstance(src, SourceJsonDirs):
-        return nodes
+def _node_read_written(node: PlanNode) -> tuple[set[str], set[str]]:
+    """(columns the node reads, columns it writes) — liveness bookkeeping."""
+    if isinstance(node, (DropNA, DropDuplicates)):
+        return set(node.subset), set()
+    if isinstance(node, Filter):
+        return node.pred.inputs(), set()
+    return set(), set()
+
+
+def _prune_and_project(
+    nodes: list[PlanNode], final_schema: Sequence[str]
+) -> list[PlanNode]:
+    """Backward liveness pass: drop ``Project`` entries whose output nothing
+    downstream reads (unused derived columns), then narrow the JSON source
+    to the columns actually consumed. Entry pruning needs to know the
+    terminal's schema; with an empty ``final_schema`` only the source
+    narrowing runs (conservative)."""
+    prune = bool(final_schema)
     needed = set(final_schema)
+    out_rev: list[PlanNode] = []
     for node in reversed(nodes[1:]):
         if isinstance(node, Select):
             needed = set(node.fields)
-        elif isinstance(node, (DropNA, DropDuplicates)):
-            needed |= set(node.subset)
-        elif isinstance(node, ApplyStages):
-            for s in reversed(node.stages):
-                if s.output_col != s.input_col:
-                    needed.discard(s.output_col)
-                needed.add(s.input_col)
         elif isinstance(node, Tokenize):
             needed = {spec.column for spec in node.specs}
-    kept = tuple(f for f in src.fields if f in needed)
-    if kept and kept != src.fields:
-        nodes[0] = SourceJsonDirs(src.directories, kept)
+        elif isinstance(node, Project):
+            kept: list[tuple[str, E.Expr]] = []
+            for out_col, e in reversed(node.exprs):
+                reads = e.inputs()
+                if prune and out_col not in needed:
+                    continue  # dead derived column: never computed
+                if out_col not in reads:
+                    needed.discard(out_col)
+                needed |= reads
+                kept.append((out_col, e))
+            if not kept:
+                continue  # entire node was dead
+            node = Project(tuple(reversed(kept)))
+        else:
+            reads, _ = _node_read_written(node)
+            needed |= reads
+        out_rev.append(node)
+    nodes = [nodes[0]] + list(reversed(out_rev))
+    src = nodes[0]
+    if isinstance(src, SourceJsonDirs):
+        kept_fields = tuple(f for f in src.fields if f in needed)
+        if kept_fields and kept_fields != src.fields:
+            nodes[0] = SourceJsonDirs(src.directories, kept_fields)
     return nodes
 
 
@@ -285,21 +357,19 @@ def optimize_plan(
     """Catalyst-style logical rewrites (exact: never change the result)."""
     out = _merge_adjacent(list(nodes))
     out = _pull_filters_back(out)
-    out = _project_source(out, final_schema)
+    out = _prune_and_project(out, final_schema)
     return out
 
 
 def _node_signature(node: PlanNode) -> bytes:
-    """Stable byte signature of one node (parameter-exact for stages)."""
-    if isinstance(node, ApplyStages):
-        parts = [b"ApplyStages"]
-        for s in node.stages:
-            parts.append(
-                f"{type(s).__name__}[{s.input_col}->{s.output_col}]".encode()
-                + b":"
-                + B.ops_fingerprint(s.flat_ops()).encode()
-            )
+    """Stable byte signature of one node (parameter-exact for expressions)."""
+    if isinstance(node, Project):
+        parts = [b"Project"]
+        for out_col, e in node.exprs:
+            parts.append(out_col.encode() + b"=" + e.signature())
         return b"|".join(parts)
+    if isinstance(node, Filter):
+        return b"Filter:" + node.pred.signature()
     if isinstance(node, SourceJsonDirs):
         # describe() elides the directory list; the fingerprint must not.
         return f"SourceJsonDirs({list(node.directories)}, {list(node.fields)})".encode()
@@ -358,6 +428,50 @@ def explain(
 # ---------------------------------------------------------------------------
 
 
+def run_project_frame(
+    frame: ColumnarFrame,
+    compiled: Sequence[tuple[str, tuple]],
+    workers: int = 1,
+) -> ColumnarFrame:
+    """Whole-frame Project executor: flatten each input column once, run
+    the compiled expression, unflatten once. Pure op chains optionally fan
+    out over a process pool by splitting the buffer on row boundaries
+    (every byte op is row-local, so this is embarrassingly parallel)."""
+    from .pipeline import _run_ops, _split_on_rows
+
+    flat: dict[str, np.ndarray] = {}
+    src_flat: dict[str, np.ndarray] = {}  # raw columns flatten at most once
+
+    def lookup(c: str) -> np.ndarray:
+        if c in flat:
+            return flat[c]
+        if c not in src_flat:
+            src_flat[c] = frame.flat(c)
+        return src_flat[c]
+
+    pool = None
+    if workers > 1:
+        from concurrent.futures import ProcessPoolExecutor
+
+        pool = ProcessPoolExecutor(max_workers=workers)
+    out = frame
+    try:
+        for out_col, comp in compiled:
+            if pool is not None and comp[0] == "chain":
+                src = lookup(comp[1])
+                chunks = _split_on_rows(src, workers)
+                parts = list(pool.map(_run_ops, [(list(comp[2]), c) for c in chunks]))
+                buf = np.concatenate(parts) if parts else src
+            else:
+                buf = E.eval_str(comp, lookup, len(frame))
+            flat[out_col] = buf
+            out = out.ensure_column(out_col).with_flat(out_col, buf)
+    finally:
+        if pool is not None:
+            pool.shutdown()
+    return out
+
+
 def _exec_frame_node(
     node: PlanNode, frame: ColumnarFrame | None, workers: int, optimize: bool
 ) -> ColumnarFrame:
@@ -372,9 +486,22 @@ def _exec_frame_node(
         return frame.dropna(list(node.subset))
     if isinstance(node, DropDuplicates):
         return frame.drop_duplicates(list(node.subset))
-    if isinstance(node, ApplyStages):
-        plans = compile_column_plans(node.stages, optimize)
-        return run_column_plans(frame, plans, workers=workers)
+    if isinstance(node, Project):
+        compiled = E.compile_project(node.exprs, optimize)
+        return run_project_frame(frame, compiled, workers=workers)
+    if isinstance(node, Filter):
+        comp = E.compile_pred(node.pred)
+        if optimize:
+            comp = E.fuse_compiled(comp)
+        memo: dict[str, np.ndarray] = {}  # predicate leaves share one flatten
+
+        def lk(c: str) -> np.ndarray:
+            if c not in memo:
+                memo[c] = frame.flat(c)
+            return memo[c]
+
+        keep = E.eval_mask(comp, lk, len(frame))
+        return frame if keep.all() else frame.take(keep)
     if isinstance(node, Split):
         train, val = split_indices(len(frame), node.fraction, node.seed)
         return frame.take(np.sort(train) if node.part == "train" else np.sort(val))
@@ -431,7 +558,7 @@ def continue_frame_plan(
         dt = time.perf_counter() - t0
         if isinstance(node, (SourceJsonDirs, SourceFrame)):
             t.ingestion += dt
-        elif isinstance(node, ApplyStages):
+        elif isinstance(node, Project):
             seen_cleaning = True
             t.cleaning += dt
         elif seen_cleaning:
@@ -466,15 +593,15 @@ def _drain_bucketed(
     final: bool,
 ) -> tuple[list[dict[str, np.ndarray]], dict[str, np.ndarray] | None]:
     """Bucketed drain: (emitted batches, carry rows). Full batches are
-    per-bucket, sliced to the bucket width; per-bucket remainders carry to
-    the next window, or on the final drain follow the batch node's
+    per-bucket-cell, sliced to the cell widths; per-cell remainders carry
+    to the next window, or on the final drain follow the batch node's
     remainder policy (shared ``emit_remainders``). When shuffling, the
     emitted batch order is permuted too — matching the whole-frame
     assembler — so the stream is not a systematic short-to-long length
     run within every window."""
-    from ..data.batching import derive_buckets, emit_remainders
+    from ..data.batching import bucket_grid, emit_remainders
 
-    buckets = batch.buckets or derive_buckets(pool[batch.bucket_by].shape[1])
+    _, buckets = bucket_grid(batch.bucket_by, batch.buckets, pool)
     out, rest = emit_bucketed(pool, order, batch.batch_size, batch.bucket_by, buckets)
     carry: dict[str, np.ndarray] | None = None
     if rest.size:

@@ -1,13 +1,26 @@
 """Spark ML Feature–style preprocessing stages (the paper's four new APIs).
 
+.. deprecated::
+    The ``Stage`` verbs are thin shims over the column-expression IR
+    (:mod:`repro.core.expr`): each stage's whole behavior is *defined* by
+    the expression its :meth:`Stage.to_expr` constructs, and
+    ``Dataset.apply(*stages)`` simply lowers those expressions into a
+    ``Project`` plan node — exactly what ``Dataset.with_column(name,
+    expr)`` / ``transform(**exprs)`` do directly. New code should compose
+    expressions (``col("abstract").lower().strip_html()...``); the stage
+    classes remain for the paper-faithful API surface
+    (``abstract_stages``/``title_stages``, ``run_p3sapp``) and as the
+    row-wise oracle of the differential tests. Outputs are byte-identical
+    either way: the stage path and the expression path compile to the same
+    byte ops.
+
 Each stage follows the Spark ML ``Transformer`` protocol (``fit`` is identity
 for pure transformers, kept for API fidelity with Spark ``Pipeline.fit``) and
 provides two execution paths:
 
-* ``flat_ops`` / ``transform_flat`` — the P3SAPP path: vectorized byte ops
-  over the flat columnar buffer (see :mod:`repro.core.bytesops`). Stages
-  describe themselves as op descriptors so the pipeline executor can fuse
-  adjacent compatible ops across stage boundaries.
+* ``to_expr`` / ``flat_ops`` / ``transform_flat`` — the P3SAPP path:
+  vectorized byte ops over the flat columnar buffer, derived from the
+  stage's expression (see :mod:`repro.core.bytesops`).
 * ``transform_row`` — the row-wise oracle with *identical semantics*, used by
   the conventional approach (Algorithm 2) and by the equivalence tests.
 
@@ -21,26 +34,13 @@ from __future__ import annotations
 import numpy as np
 
 from . import bytesops as B
-
-# The English stopword list used by Spark's StopWordsRemover is long; this is
-# the classic NLTK-ish core, sufficient for the case study and configurable.
-ENGLISH_STOPWORDS: tuple[str, ...] = tuple(
-    (
-        "i me my myself we our ours ourselves you your yours yourself yourselves "
-        "he him his himself she her hers herself it its itself they them their "
-        "theirs themselves what which who whom this that these those am is are "
-        "was were be been being have has had having do does did doing a an the "
-        "and but if or because as until while of at by for with about against "
-        "between into through during before after above below to from up down in "
-        "out on off over under again further then once here there when where why "
-        "how all any both each few more most other some such no nor not only own "
-        "same so than too very s t can will just don should now"
-    ).split()
-)
+from . import expr as E
+from .expr import ENGLISH_STOPWORDS  # noqa: F401  (canonical home is expr.py)
 
 
 class Stage:
-    """Base transformer: Spark ML Feature API protocol."""
+    """Base transformer: Spark ML Feature API protocol (deprecated shim —
+    see module docstring; behavior is defined by :meth:`to_expr`)."""
 
     def __init__(self, input_col: str, output_col: str | None = None):
         self.input_col = input_col
@@ -51,9 +51,16 @@ class Stage:
     def fit(self, frame) -> "Stage":
         return self
 
+    # --- expression shim (single source of truth) ------------------------
+    def to_expr(self, e: E.Expr) -> E.Expr:
+        """The expression this stage is a shim for, applied to ``e``."""
+        raise NotImplementedError
+
     # --- P3SAPP vectorized path ------------------------------------------
     def flat_ops(self) -> list[B.Op]:
-        raise NotImplementedError
+        comp = E.compile_expr(self.to_expr(E.col(self.input_col)))
+        assert comp[0] == "chain" and comp[1] == self.input_col
+        return list(comp[2])
 
     def transform_flat(self, buf: np.ndarray) -> np.ndarray:
         return B.apply_ops(buf, self.flat_ops())
@@ -69,8 +76,8 @@ _ASCII_LOWER_TABLE = {c: c + 32 for c in range(ord("A"), ord("Z") + 1)}
 class ConvertToLower(Stage):
     """Paper §4.1.1 — lowercase every entry of the column."""
 
-    def flat_ops(self):
-        return [B.lut_op(B.LOWER_LUT)]
+    def to_expr(self, e):
+        return e.lower()
 
     def transform_row(self, row):
         # ASCII-only lowering to match the byte LUT exactly.
@@ -93,8 +100,8 @@ def _strip_spans_row(row: str, open_c: str, close_c: str) -> str:
 class RemoveHTMLTags(Stage):
     """Paper §4.1.2 — strip ``<...>`` spans (balanced per row, see contract)."""
 
-    def flat_ops(self):
-        return [B.span_op("<", ">")]
+    def to_expr(self, e):
+        return e.strip_html()
 
     def transform_row(self, row):
         return _strip_spans_row(row, "<", ">")
@@ -104,13 +111,8 @@ class RemoveUnwantedCharacters(Stage):
     """Paper §4.1.3 — parenthetical text, contraction mapping, punctuation,
     digits/special characters → cleaned lowercase word stream."""
 
-    def flat_ops(self):
-        return [
-            B.span_op("(", ")"),
-            B.replace_op(B.CONTRACTIONS),
-            B.lut_op(B.UNWANTED_LUT),
-            B.collapse_op(),
-        ]
+    def to_expr(self, e):
+        return e.strip_parens().expand_contractions().keep_letters().collapse_spaces()
 
     def transform_row(self, row):
         row = _strip_spans_row(row, "(", ")")
@@ -127,10 +129,8 @@ class RemoveShortWords(Stage):
         super().__init__(input_col, output_col)
         self.threshold = threshold
 
-    def flat_ops(self):
-        from functools import partial
-
-        return [B.wordpred_op(partial(B.pred_short, threshold=self.threshold), needs_hashes=False)]
+    def to_expr(self, e):
+        return e.min_word_len(self.threshold + 1)
 
     def transform_row(self, row):
         return " ".join(w for w in row.split(" ") if len(w) > self.threshold)
@@ -140,8 +140,8 @@ class Tokenizer(Stage):
     """Spark ML ``Tokenizer``: whitespace split (columnar form: normalize
     whitespace; list materialization happens at the frame boundary)."""
 
-    def flat_ops(self):
-        return [B.collapse_op()]
+    def to_expr(self, e):
+        return e.collapse_spaces()
 
     def transform_row(self, row):
         return " ".join(w for w in row.split(" ") if w)
@@ -161,10 +161,8 @@ class StopWordsRemover(Stage):
         self._stopset = frozenset(self.stopwords)
         self._words = B.WordSet(self.stopwords)
 
-    def flat_ops(self):
-        from functools import partial
-
-        return [B.wordpred_op(partial(B.pred_stopword, words=self._words), needs_hashes=True)]
+    def to_expr(self, e):
+        return e.remove_stopwords(self._words)
 
     def transform_row(self, row):
         return " ".join(w for w in row.split(" ") if w and w not in self._stopset)
@@ -176,7 +174,8 @@ class StopWordsRemover(Stage):
 
 
 def abstract_stages(col: str = "abstract", threshold: int = 1) -> list[Stage]:
-    """Paper Fig. 2: abstracts are the model *feature* → full cleaning."""
+    """Paper Fig. 2: abstracts are the model *feature* → full cleaning.
+    Expression form: :func:`repro.core.expr.abstract_expr`."""
     return [
         ConvertToLower(col),
         RemoveHTMLTags(col),
@@ -187,7 +186,8 @@ def abstract_stages(col: str = "abstract", threshold: int = 1) -> list[Stage]:
 
 
 def title_stages(col: str = "title") -> list[Stage]:
-    """Paper Fig. 3: titles are the model *target* → keep stopwords."""
+    """Paper Fig. 3: titles are the model *target* → keep stopwords.
+    Expression form: :func:`repro.core.expr.title_expr`."""
     return [
         ConvertToLower(col),
         RemoveHTMLTags(col),

@@ -21,7 +21,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get, get_smoke
-from ..core.p3sapp import p3sapp_dataset
+from ..core.dataset import Dataset
+from ..core.expr import abstract_expr, col, title_expr
 from ..data.synthetic import write_corpus
 from ..distributed.sharding import DEFAULT_RULES, data_axis_names, tree_shardings
 from ..models.lm import LM, MeshContext
@@ -34,7 +35,17 @@ from .mesh import make_host_mesh, make_production_mesh
 def build_dataset(cfg, seq_len: int, corpus_mb: float, seed: int) -> np.ndarray:
     corpus = tempfile.mkdtemp(prefix="p3sapp_train_")
     write_corpus(corpus, total_bytes=int(corpus_mb * 1e6), n_files=6, seed=seed)
-    ds = p3sapp_dataset([corpus])
+    # The canonical chain in expression form (see repro.core.expr):
+    # where() predicates filter on raw byte buffers before any cleaning,
+    # transform() fuses the per-column expression chains.
+    keep = col("title").not_empty() & col("abstract").not_empty()
+    ds = (
+        Dataset.from_json_dirs([corpus])
+        .where(keep)
+        .drop_duplicates()
+        .transform(abstract=abstract_expr(), title=title_expr())
+        .where(keep)
+    )
     records, timings = ds.execute(optimize=True)
     print(f"P3SAPP: {len(records)} records in {timings.cumulative:.2f}s")
     # vocabulary fitting as a plan verb (shard-merged counts when the

@@ -175,6 +175,180 @@ def test_explicit_buckets_are_extended_to_max_len():
 
 
 # ---------------------------------------------------------------------------
+# paired encoder/decoder bucketing (2-D grid)
+# ---------------------------------------------------------------------------
+
+MAX_B = 8
+
+
+def records_two_cols(n=96, seed=7):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        ka = int(rng.integers(1, MAX_LEN + 4))
+        kb = int(rng.integers(1, MAX_B + 2))
+        out.append(
+            {
+                "a": " ".join(rng.choice(WORDS, size=ka)),
+                "b": " ".join(rng.choice(WORDS, size=kb)),
+            }
+        )
+    return out
+
+
+def pair_ds():
+    from repro.data.batching import TokenSpec
+
+    return Dataset.from_records(records_two_cols(), ["a", "b"]).tokenize(
+        TOK, (TokenSpec("a", MAX_LEN), TokenSpec("b", MAX_B))
+    )
+
+
+def pair_multiset(batches):
+    return sorted(
+        (
+            repad(b, "a_tokens", MAX_LEN)[i].tobytes(),
+            repad(b, "b_tokens", MAX_B)[i].tobytes(),
+        )
+        for b in batches
+        for i in range(len(b["a_tokens"]))
+    )
+
+
+def test_paired_bucketing_lossless_and_grid_bounded():
+    fixed = list(
+        pair_ds().batch(8, shuffle=False, drop_remainder=False).iter_batches()
+    )
+    paired = list(
+        pair_ds()
+        .batched(
+            8, shuffle=False, drop_remainder=False,
+            bucket_by=("a_tokens", "b_tokens"),
+        )
+        .iter_batches()
+    )
+    grid_a, grid_b = derive_buckets(MAX_LEN), derive_buckets(MAX_B)
+    shapes = {(b["a_tokens"].shape[1], b["b_tokens"].shape[1]) for b in paired}
+    assert shapes <= {(wa, wb) for wa in grid_a for wb in grid_b}
+    assert len({wa for wa, _ in shapes}) > 1 and len({wb for _, wb in shapes}) > 1
+    assert all(len(b["a_tokens"]) <= 8 for b in paired)
+    assert pair_multiset(paired) == pair_multiset(fixed)
+
+
+def test_paired_bucketing_cuts_padding_on_both_columns():
+    """The ROADMAP's point: 1-D bucketing only drops encoder padding;
+    the 2-D grid drops decoder padding too."""
+    fixed = list(
+        pair_ds().batch(8, shuffle=False, drop_remainder=False).iter_batches()
+    )
+    one_d = list(
+        pair_ds()
+        .batched(8, shuffle=False, drop_remainder=False, bucket_by="a_tokens")
+        .iter_batches()
+    )
+    paired = list(
+        pair_ds()
+        .batched(
+            8, shuffle=False, drop_remainder=False,
+            bucket_by=("a_tokens", "b_tokens"),
+        )
+        .iter_batches()
+    )
+    for col in ("a_tokens", "b_tokens"):
+        assert pad_token_fraction(paired, col) < pad_token_fraction(fixed, col)
+    # 1-D bucketing leaves the decoder column at full width; 2-D beats it
+    assert pad_token_fraction(paired, "b_tokens") < pad_token_fraction(
+        one_d, "b_tokens"
+    )
+    assert pad_token_fraction(one_d, "b_tokens") == pad_token_fraction(
+        fixed, "b_tokens"
+    )
+
+
+def test_paired_bucketing_explicit_nested_buckets_and_validation():
+    ds = pair_ds().batched(
+        4, bucket_by=("a_tokens", "b_tokens"), buckets=[[4], [2]]
+    )
+    node = ds.plan[-1]
+    assert node.bucket_by == ("a_tokens", "b_tokens")
+    assert node.buckets == ((4, MAX_LEN), (2, MAX_B))
+    assert "bucket_by=['a_tokens', 'b_tokens']" in node.describe()
+    with pytest.raises(ValueError):
+        pair_ds().batched(4, bucket_by=("a_tokens", "b_tokens"), buckets=[4, 8])
+    with pytest.raises(ValueError):
+        pair_ds().batched(4, bucket_by=("a_tokens", "b_tokens"), buckets=[[4]])
+    with pytest.raises(KeyError):
+        pair_ds().batched(4, bucket_by=("a_tokens", "nope"))
+
+
+def test_paired_bucketing_remainder_policies():
+    padded = list(
+        pair_ds()
+        .batched(
+            8, shuffle=False, pad_to=8, bucket_by=("a_tokens", "b_tokens")
+        )
+        .iter_batches()
+    )
+    assert all(len(b["a_tokens"]) == 8 for b in padded)
+    n_real = sum(
+        int((effective_lengths(b["a_tokens"]) > 0).sum()) for b in padded
+    )
+    assert n_real == len(records_two_cols())
+
+
+def test_streaming_paired_bucketing_matches_wholeframe(tmp_path):
+    d = tmp_path / "corpus"
+    d.mkdir()
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        with open(d / f"s{i}.jsonl", "w", encoding="utf-8") as fh:
+            for _ in range(24):
+                title = " ".join(rng.choice(WORDS, size=int(rng.integers(1, 7))))
+                abstract = " ".join(rng.choice(WORDS, size=int(rng.integers(1, 30))))
+                fh.write(json.dumps({"title": title, "abstract": abstract}) + "\n")
+
+    specs = seq2seq_specs(max_abstract_len=24, max_title_len=8)
+
+    def chain():
+        return (
+            Dataset.from_json_dirs([d])
+            .dropna()
+            .apply(*case_study_stages())
+            .dropna()
+            .tokenize(TOK, specs)
+            .batched(
+                8, shuffle=False, drop_remainder=False,
+                bucket_by=("encoder_tokens", "decoder_tokens"),
+            )
+        )
+
+    whole = list(chain().iter_batches())
+    streamed = list(chain().prefetch(2).iter_batches(workers=2))
+    cells = {
+        (wa, wb)
+        for wa in derive_buckets(24)
+        for wb in derive_buckets(8)
+    }
+    for batches in (whole, streamed):
+        assert {
+            (b["encoder_tokens"].shape[1], b["decoder_tokens"].shape[1])
+            for b in batches
+        } <= cells
+
+    def rows(batches):
+        return sorted(
+            (
+                repad(b, "encoder_tokens", 24)[i].tobytes(),
+                repad(b, "decoder_tokens", 8)[i].tobytes(),
+            )
+            for b in batches
+            for i in range(len(b["encoder_tokens"]))
+        )
+
+    assert rows(streamed) == rows(whole)
+
+
+# ---------------------------------------------------------------------------
 # streaming bucketed assembly matches whole-frame
 # ---------------------------------------------------------------------------
 

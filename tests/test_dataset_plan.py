@@ -51,7 +51,7 @@ def test_builders_are_lazy():
         .dropna()
     )
     kinds = [type(n) for n in ds.plan]
-    assert kinds == [P.SourceJsonDirs, P.DropNA, P.DropDuplicates, P.ApplyStages, P.DropNA]
+    assert kinds == [P.SourceJsonDirs, P.DropNA, P.DropDuplicates, P.Project, P.DropNA]
     # executing an empty source is fine too (no such files -> empty frame)
     assert ds.collect().to_records() == []
 
@@ -94,8 +94,8 @@ def test_adjacent_apply_and_dropna_merge():
         .dropna(["abstract"])
     )
     opt = ds.optimized_plan()
-    applies = [n for n in opt if isinstance(n, P.ApplyStages)]
-    assert len(applies) == 1 and len(applies[0].stages) == 2
+    projects = [n for n in opt if isinstance(n, P.Project)]
+    assert len(projects) == 1 and len(projects[0].exprs) == 2
     dropnas = [n for n in opt if isinstance(n, P.DropNA)]
     assert len(dropnas) == 1 and set(dropnas[0].subset) == {"title", "abstract"}
 
@@ -114,7 +114,7 @@ def test_dropna_pullback_past_disjoint_apply():
         .dropna(["title"])
     )
     opt = ds.optimized_plan()
-    assert isinstance(opt[1], P.DropNA) and isinstance(opt[2], P.ApplyStages)
+    assert isinstance(opt[1], P.DropNA) and isinstance(opt[2], P.Project)
     # pulled-back plan produces the same records as the unoptimized order
     plain = ds.collect(optimize=False).to_records()
     fused = ds.collect(optimize=True).to_records()
@@ -129,7 +129,7 @@ def test_dropna_stays_after_apply_that_writes_it():
         .dropna(["title"])
     )
     opt = ds.optimized_plan()
-    assert isinstance(opt[1], P.ApplyStages) and isinstance(opt[2], P.DropNA)
+    assert isinstance(opt[1], P.Project) and isinstance(opt[2], P.DropNA)
 
 
 def test_projection_pushdown_narrows_source():

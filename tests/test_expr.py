@@ -1,0 +1,289 @@
+"""Column-expression IR: construction, structural hashing, compilation,
+and flat-buffer evaluation semantics.
+
+The expression layer is the single source of truth for every text
+transform — the legacy Stage verbs are shims over it — so its signatures
+must be stable-and-parameter-sensitive, its predicates must match Python
+row semantics exactly, and its compiled programs must pickle (they ride
+into worker processes).
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import bytesops as B
+from repro.core import expr as E
+from repro.core.dataset import Dataset
+from repro.core.expr import col, concat, lit
+
+
+def flat(rows):
+    return B.flatten(rows)
+
+
+def run_expr(e, columns):
+    """Evaluate a string expression against dict-of-row-lists columns."""
+    comp = E.fuse_compiled(E.compile_expr(e))
+    n = len(next(iter(columns.values())))
+    out = E.eval_str(comp, lambda c: flat(columns[c]), n)
+    return B.unflatten(out)
+
+
+def run_pred(p, columns):
+    comp = E.fuse_compiled(E.compile_pred(p))
+    n = len(next(iter(columns.values())))
+    return E.eval_mask(comp, lambda c: flat(columns[c]), n)
+
+
+# ---------------------------------------------------------------------------
+# string expressions
+# ---------------------------------------------------------------------------
+
+
+def test_chained_string_ops():
+    rows = ["The <b>QUICK</b> Fox (very fast)!", "", "won't stop"]
+    got = run_expr(
+        col("t").lower().strip_html().strip_parens()
+        .expand_contractions().keep_letters().collapse_spaces(),
+        {"t": rows},
+    )
+    assert got == ["the quick fox", "", "will not stop"]
+
+
+def test_min_word_len_and_stopwords():
+    rows = ["a bb ccc dddd", "the fox and hound"]
+    assert run_expr(col("t").min_word_len(3), {"t": rows}) == [
+        "ccc dddd", "the fox and hound"
+    ]
+    assert run_expr(col("t").remove_stopwords(), {"t": rows}) == [
+        "bb ccc dddd", "fox hound"
+    ]
+    assert run_expr(
+        col("t").remove_stopwords(("fox", "bb")), {"t": rows}
+    ) == ["a ccc dddd", "the and hound"]
+
+
+def test_regex_replace():
+    rows = ["version 1.23 beta", "no digits here"]
+    got = run_expr(col("t").regex_replace(r"[0-9]+", "#"), {"t": rows})
+    assert got == ["version #.# beta", "no digits here"]
+    with pytest.raises(Exception):
+        col("t").regex_replace("(unbalanced")
+    with pytest.raises(ValueError):
+        col("t").regex_replace("\x00")
+
+
+def test_regex_cannot_corrupt_row_structure():
+    """Patterns that can match the row separator must be rejected at
+    build time (common classes) or fail loudly at execution — never merge
+    or split rows silently."""
+    for pat in (r"[^a-z]", r".", r"\W", r"\D"):
+        with pytest.raises(ValueError, match="separator"):
+            col("t").regex_replace(pat, " ")
+    with pytest.raises(ValueError):
+        col("t").regex_replace("a", "x\x00y")
+    # a pattern that slips past the build-time probes (NUL in a context
+    # none of the probe strings exhibit) still trips the runtime row-count
+    # check instead of silently merging rows
+    op = B.regex_op("yz\x00", "_")
+    with pytest.raises(ValueError, match="row"):
+        B.apply_op(flat(["ab", "xyz"]), op)
+
+
+def test_nul_rejected_in_literals_and_replacements():
+    with pytest.raises(ValueError):
+        lit("p\x00q")
+    with pytest.raises(ValueError):
+        col("t").replace([("b", "\x00")])
+    with pytest.raises(ValueError):
+        col("t").replace([("\x00", "b")])
+    with pytest.raises(ValueError):
+        concat(col("a"), col("b"), sep="\x00")
+    with pytest.raises(ValueError):
+        col("t").contains("\x00")
+
+
+def test_concat_and_lit():
+    cols = {"a": ["x", "y"], "b": ["1", "2"]}
+    assert run_expr(concat(col("a"), col("b")), cols) == ["x 1", "y 2"]
+    assert run_expr(concat(col("a"), col("b"), sep="|"), cols) == ["x|1", "y|2"]
+    assert run_expr(
+        concat(lit("<"), col("a"), lit(">"), sep=""), cols
+    ) == ["<x>", "<y>"]
+    # ops over a concat root
+    assert run_expr(concat(col("a"), col("b")).lower(), {"a": ["X"], "b": ["Y"]}) == [
+        "x y"
+    ]
+    with pytest.raises(ValueError):
+        concat(lit("a"), lit("b"))  # literals only: no row count
+    with pytest.raises(ValueError):
+        concat()
+
+
+# ---------------------------------------------------------------------------
+# predicates
+# ---------------------------------------------------------------------------
+
+
+def test_predicates_match_python_semantics():
+    rows = ["one two three", "", "single", "has needle here", "x " * 40]
+    cols = {"t": rows}
+    np.testing.assert_array_equal(
+        run_pred(col("t").word_count() >= 2, cols),
+        [len(r.split(" ")) - r.split(" ").count("") >= 2 for r in rows],
+    )
+    np.testing.assert_array_equal(
+        run_pred(col("t").word_count() == 1, cols),
+        [r != "" and len(r.split()) == 1 for r in rows],
+    )
+    np.testing.assert_array_equal(
+        run_pred(col("t").contains("needle"), cols),
+        ["needle" in r for r in rows],
+    )
+    np.testing.assert_array_equal(
+        run_pred(col("t").not_empty(), cols), [r != "" for r in rows]
+    )
+
+
+def test_boolean_algebra():
+    cols = {"t": ["aa bb", "aa", "", "cc dd ee"]}
+    both = (col("t").word_count() >= 2) & col("t").contains("aa")
+    np.testing.assert_array_equal(run_pred(both, cols), [True, False, False, False])
+    either = (col("t").word_count() >= 3) | col("t").contains("aa")
+    np.testing.assert_array_equal(run_pred(either, cols), [True, True, False, True])
+    np.testing.assert_array_equal(run_pred(~either, cols), [False, False, True, False])
+
+
+def test_contains_never_matches_across_rows():
+    # "ab" split across two rows must not match
+    mask = run_pred(col("t").contains("ab"), {"t": ["xa", "by"]})
+    np.testing.assert_array_equal(mask, [False, False])
+
+
+def test_word_count_compare_requires_int():
+    with pytest.raises(TypeError):
+        col("t").word_count() >= "three"
+    with pytest.raises(TypeError):
+        Dataset.from_records([{"t": "x"}], ["t"]).where(col("t").word_count())
+
+
+# ---------------------------------------------------------------------------
+# structural hashing
+# ---------------------------------------------------------------------------
+
+
+def test_signatures_stable_and_parameter_sensitive():
+    def build(n=2, pat="a+"):
+        return col("t").lower().regex_replace(pat, "_").min_word_len(n)
+
+    assert build().fingerprint() == build().fingerprint()
+    assert build().fingerprint() != build(n=3).fingerprint()
+    assert build().fingerprint() != build(pat="b+").fingerprint()
+    # different stopword lists differ; same list is stable
+    a = col("t").remove_stopwords(("x", "y"))
+    b = col("t").remove_stopwords(("x", "z"))
+    assert a.fingerprint() == col("t").remove_stopwords(("x", "y")).fingerprint()
+    assert a.fingerprint() != b.fingerprint()
+    # predicates
+    p = (col("t").word_count() >= 2) & col("u").contains("q")
+    q = (col("t").word_count() >= 2) & col("u").contains("r")
+    assert p.fingerprint() == ((col("t").word_count() >= 2) & col("u").contains("q")).fingerprint()
+    assert p.fingerprint() != q.fingerprint()
+    # concat sep is a parameter
+    assert (
+        concat(col("a"), col("b"), sep=" ").fingerprint()
+        != concat(col("a"), col("b"), sep="|").fingerprint()
+    )
+
+
+def test_compiled_signature_matches_inputs():
+    e = concat(col("a").lower(), col("b"))
+    comp = E.compile_expr(e)
+    assert E.compiled_inputs(comp) == {"a", "b"}
+    assert e.inputs() == {"a", "b"}
+    p = (col("x").word_count() >= 1) | col("y").not_empty()
+    assert E.compiled_inputs(E.compile_pred(p)) == {"x", "y"}
+
+
+def test_compiled_programs_pickle():
+    e = concat(col("a").lower().remove_stopwords(), col("b").min_word_len(2))
+    comp = E.fuse_compiled(E.compile_expr(e))
+    again = pickle.loads(pickle.dumps(comp))
+    got = E.eval_str(again, lambda c: flat({"a": ["The X"], "b": ["a bb"]}[c]), 1)
+    assert B.unflatten(got) == ["x bb"]
+
+
+def test_fusion_is_exact_and_shorter():
+    e = col("t").lower().keep_letters().min_word_len(2).remove_stopwords()
+    comp = E.compile_expr(e)
+    fused = E.fuse_compiled(comp)
+    assert len(fused[2]) < len(comp[2])  # LUT∘LUT + OR-ed word predicates
+    cols = {"t": ["The QUICK5 fox a bb"]}
+    n = 1
+    a = E.eval_str(comp, lambda c: flat(cols[c]), n)
+    b = E.eval_str(fused, lambda c: flat(cols[c]), n)
+    assert B.unflatten(a) == B.unflatten(b)
+
+
+# ---------------------------------------------------------------------------
+# Dataset integration
+# ---------------------------------------------------------------------------
+
+
+def test_with_column_derives_and_overwrites():
+    records = [{"t": "Hello World"}, {"t": "Bye"}]
+    ds = Dataset.from_records(records, ["t"]).with_column("t_low", col("t").lower())
+    assert ds.schema == ("t", "t_low")
+    out = ds.collect().to_records()
+    assert out == [
+        {"t": "Hello World", "t_low": "hello world"},
+        {"t": "Bye", "t_low": "bye"},
+    ]
+    # sequential transform: later entries see earlier outputs
+    ds2 = Dataset.from_records(records, ["t"]).transform(
+        a=col("t").lower(), b=col("a").min_word_len(4)
+    )
+    assert [r["b"] for r in ds2.collect().to_records()] == ["hello world", ""]
+
+
+def test_where_filters_rows():
+    records = [{"t": "one two"}, {"t": ""}, {"t": "solo"}]
+    ds = Dataset.from_records(records, ["t"]).where(col("t").word_count() >= 2)
+    assert [r["t"] for r in ds.collect().to_records()] == ["one two"]
+
+
+def test_unknown_columns_rejected():
+    ds = Dataset.from_records([{"t": "x"}], ["t"])
+    with pytest.raises(KeyError):
+        ds.with_column("y", col("missing").lower())
+    with pytest.raises(KeyError):
+        ds.where(col("missing").not_empty())
+    with pytest.raises(TypeError):
+        ds.with_column("y", "not an expression")
+
+
+def test_stage_shims_are_byte_identical_to_expressions():
+    """Every Stage is a shim over its expression: flat_ops derive from
+    to_expr, and apply() == transform() byte for byte."""
+    from repro.core.p3sapp import case_study_stages
+    from repro.core.expr import abstract_expr, title_expr
+
+    records = [
+        {"title": "The <b>Title</b> (no 1)", "abstract": "Isn't ALL that? short"},
+        {"title": "Another X", "abstract": "B c dd <i>eee</i>"},
+    ]
+    via_stages = (
+        Dataset.from_records(records, ["title", "abstract"])
+        .apply(*case_study_stages())
+        .collect()
+        .to_records()
+    )
+    via_exprs = (
+        Dataset.from_records(records, ["title", "abstract"])
+        .transform(abstract=abstract_expr(), title=title_expr())
+        .collect()
+        .to_records()
+    )
+    assert via_stages == via_exprs

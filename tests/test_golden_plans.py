@@ -1,29 +1,37 @@
 """Golden-plan regression tests.
 
-The optimizer's rewrites (stage merge, dropna pullback, source projection)
-are *exact* — they must never change what a plan computes — so their
-output shape is part of the API. These snapshots pin the optimized plan
-for four representative chains; an optimizer refactor that changes any of
-them must update the snapshot deliberately, not silently.
+The optimizer's rewrites (Project merge, filter pullback, dead-column
+pruning, source projection) are *exact* — they must never change what a
+plan computes — so their output shape is part of the API. These snapshots
+pin the optimized plan for representative chains; an optimizer refactor
+that changes any of them must update the snapshot deliberately, not
+silently.
 
 The plan fingerprint (:func:`repro.core.plan.plan_fingerprint`) is pinned
 structurally (stable across rebuilds, sensitive to every parameter) rather
-than by literal value, since op fingerprints hash LUT/pattern contents.
+than by literal value, since expression fingerprints hash LUT/pattern
+contents.
 """
 
 from repro.core import plan as P
 from repro.core.dataset import Dataset
+from repro.core.expr import abstract_expr, col, concat, title_expr
 from repro.core.p3sapp import case_study_stages
 from repro.core.stages import ConvertToLower, RemoveShortWords
 from repro.data.batching import TokenSpec
 from repro.data.tokenizer import WordTokenizer
+
+CLEAN_CHAIN = (
+    ".strip_html().strip_parens().expand_contractions()"
+    ".keep_letters().collapse_spaces()"
+)
 
 
 def optimized_lines(ds: Dataset) -> list[str]:
     return [n.describe() for n in ds.optimized_plan()]
 
 
-def test_golden_stage_and_filter_merge():
+def test_golden_project_and_filter_merge():
     ds = (
         Dataset.from_json_dirs(["/x"])
         .apply(ConvertToLower("title"))
@@ -33,7 +41,7 @@ def test_golden_stage_and_filter_merge():
     )
     assert optimized_lines(ds) == [
         "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "ApplyStages(ConvertToLower[title->title], RemoveShortWords[title->title])",
+        "Project(title=col('title').lower(), title=col('title').min_word_len(3))",
         "DropNA(['title', 'abstract'])",
     ]
 
@@ -47,7 +55,7 @@ def test_golden_dropna_pullback():
     assert optimized_lines(ds) == [
         "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
         "DropNA(['title'])",
-        "ApplyStages(ConvertToLower[abstract->abstract])",
+        "Project(abstract=col('abstract').lower())",
     ]
 
 
@@ -62,8 +70,8 @@ def test_golden_source_projection():
     assert optimized_lines(ds) == [
         "SourceJsonDirs(dirs=1, fields=['abstract'])",
         "DropNA(['abstract'])",
-        "ApplyStages(ConvertToLower[abstract->abstract])",
-        "Tokenize(['abstract->abstract_tokens'])",
+        "Project(abstract=col('abstract').lower())",
+        "Tokenize(abstract->abstract_tokens[max_len=16])",
     ]
 
 
@@ -79,16 +87,72 @@ def test_golden_canonical_p3sapp_chain():
         "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
         "DropNA(['title', 'abstract'])",
         "DropDuplicates(['title', 'abstract'])",
-        "ApplyStages(ConvertToLower[abstract->abstract], "
-        "RemoveHTMLTags[abstract->abstract], "
-        "RemoveUnwantedCharacters[abstract->abstract], "
-        "StopWordsRemover[abstract->abstract], "
-        "RemoveShortWords[abstract->abstract], "
-        "ConvertToLower[title->title], RemoveHTMLTags[title->title], "
-        "RemoveUnwantedCharacters[title->title], "
-        "RemoveShortWords[title->title])",
+        "Project(abstract=col('abstract').lower(), "
+        "abstract=col('abstract').strip_html(), "
+        "abstract=col('abstract').strip_parens().expand_contractions()"
+        ".keep_letters().collapse_spaces(), "
+        "abstract=col('abstract').remove_stopwords(127 words), "
+        "abstract=col('abstract').min_word_len(2), "
+        "title=col('title').lower(), title=col('title').strip_html(), "
+        "title=col('title').strip_parens().expand_contractions()"
+        ".keep_letters().collapse_spaces(), "
+        "title=col('title').min_word_len(2))",
         "DropNA(['title', 'abstract'])",
     ]
+
+
+def test_golden_expression_plan_filter_pushed_below_project():
+    """Acceptance snapshot: a ``where`` on a *raw* column declared after a
+    ``Project`` is pushed back below it, so the predicate runs on source
+    byte buffers before any cleaning touches the dropped rows; the unused
+    derived column is pruned; the merged predicate renders as a tree."""
+    tok = WordTokenizer(["w"])
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .with_column("abstract", abstract_expr())
+        .with_column("title_clean", title_expr())  # dead: nothing reads it
+        .where(col("title").not_empty() & col("title").contains("a"))
+        .tokenize(tok, (TokenSpec("abstract", 16),))
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "Filter((col('title').not_empty() & col('title').contains('a')))",
+        "Project(abstract=col('abstract').lower()"
+        + CLEAN_CHAIN
+        + ".remove_stopwords(127 words).min_word_len(2))",
+        "Tokenize(abstract->abstract_tokens[max_len=16])",
+    ]
+
+
+def test_golden_filter_on_derived_column_stays_put():
+    """The dual snapshot: a predicate reading a column the Project writes
+    must NOT move — pushing it down would filter on pre-cleaning bytes."""
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .with_column("abstract", abstract_expr())
+        .where(col("abstract").word_count() >= 4)
+    )
+    assert optimized_lines(ds) == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "Project(abstract=col('abstract').lower()"
+        + CLEAN_CHAIN
+        + ".remove_stopwords(127 words).min_word_len(2))",
+        "Filter((col('abstract').word_count() >= 4))",
+    ]
+
+
+def test_golden_batch_options_rendered():
+    """explain() must show batch/bucket parameters, not elide them."""
+    tok = WordTokenizer(["w"])
+    ds = (
+        Dataset.from_json_dirs(["/x"])
+        .tokenize(tok, (TokenSpec("abstract", 16), TokenSpec("title", 8)))
+        .batched(32, shuffle=False, bucket_by="abstract_tokens", buckets=[4, 8])
+    )
+    line = ds.plan[-1].describe()
+    assert "bucket_by=abstract_tokens" in line
+    assert "buckets=[4, 8, 16]" in line
+    assert "size=32" in line and "shuffle=False" in line
 
 
 def test_plan_fingerprint_stable_and_parameter_sensitive():
@@ -106,3 +170,18 @@ def test_plan_fingerprint_stable_and_parameter_sensitive():
     # the optimized fingerprint sees through no-op plan re-orderings but
     # not through real structural change
     assert a != P.plan_fingerprint(build(dirs=("/y",)).plan, build().schema)
+
+
+def test_expression_fingerprints_stable_and_parameter_sensitive():
+    def build(n=3, needle="x"):
+        return (
+            Dataset.from_json_dirs(["/x"])
+            .with_column("both", concat(col("title"), col("abstract")))
+            .where(col("both").word_count() >= n)
+            .where(col("title").contains(needle))
+        )
+
+    a = P.plan_fingerprint(build().plan, build().schema)
+    assert a == P.plan_fingerprint(build().plan, build().schema)
+    assert a != P.plan_fingerprint(build(n=4).plan, build().schema)
+    assert a != P.plan_fingerprint(build(needle="y").plan, build().schema)

@@ -181,8 +181,8 @@ def test_process_executor_shares_the_same_cache(corpus, tmp_path):
     assert ex.cache_hits == 6 and ex.cache_misses == 0
 
 
-def test_two_clean_steps_on_same_column_never_alias(corpus, tmp_path):
-    """Regression: each clean step keys the cache with its *own* lineage
+def test_two_project_steps_on_same_column_never_alias(corpus, tmp_path):
+    """Regression: each project step keys the cache with its *own* lineage
     fingerprint. With final-only fingerprints, step 2 would hit the entry
     step 1 just stored and silently skip its ops."""
     from repro.core.stages import ConvertToLower, RemoveHTMLTags
@@ -191,11 +191,11 @@ def test_two_clean_steps_on_same_column_never_alias(corpus, tmp_path):
     ds = (
         Dataset.from_json_dirs([corpus], FIELDS)
         .apply(ConvertToLower("title"))
-        .select(["title"])  # keeps the two ApplyStages from merging
+        .select(["title"])  # keeps the two Project nodes from merging
         .apply(RemoveHTMLTags("title"))
     )
     program = program_for(ds)
-    assert [k for k, _ in program.steps] == ["clean", "select", "clean"]
+    assert [k for k, _ in program.steps] == ["project", "select", "project"]
     fps = EX.step_column_fingerprints(program)
     step_ids = sorted(fps)
     assert fps[step_ids[0]]["title"] != fps[step_ids[1]]["title"]
@@ -246,7 +246,7 @@ def test_lambda_predicate_is_uncacheable_not_wrong(corpus, tmp_path):
 
     op = B.wordpred_op(lambda v, ln: ln <= 2, needs_hashes=False)
     program = EX.ShardProgram(
-        FIELDS, (("clean", (("title", "title", (op,)),)),)
+        FIELDS, (("project", (("title", ("chain", "title", (op,))),)),)
     )
     fps = EX.step_column_fingerprints(program)
     assert "title" not in fps[0]  # poisoned column: no cache key
@@ -267,6 +267,88 @@ def test_options_after_terminal_reuse_memoized_frame(corpus):
     first = ds.collect()
     reused = ds.workers(2).cache(False).collect()
     assert reused is first  # same memoized object, no re-execution
+
+
+# ---------------------------------------------------------------------------
+# expression-plan caching: per-column invalidation under the expression
+# fingerprint
+# ---------------------------------------------------------------------------
+
+
+def expr_program(corpus, title_expr_, abstract_expr_, pred=None):
+    ds = Dataset.from_json_dirs([corpus], FIELDS)
+    if pred is not None:
+        ds = ds.where(pred)
+    ds = ds.transform(title=title_expr_, abstract=abstract_expr_)
+    return program_for(ds)
+
+
+def test_expression_cache_warm_run_hits_100_pct(corpus, tmp_path, monkeypatch):
+    from repro.core.expr import col
+
+    cache_dir = tmp_path / "cache"
+    program = expr_program(
+        corpus,
+        col("title").lower().strip_html(),
+        col("abstract").lower().keep_letters().collapse_spaces(),
+        pred=col("title").not_empty(),
+    )
+    cold, ex_cold = run_thread(corpus, program, cache_dir, workers=1)
+    assert ex_cold.cache_hits == 0 and ex_cold.cache_misses == 6
+
+    calls = []
+    real = EX.B.apply_ops
+    monkeypatch.setattr(
+        EX.B, "apply_ops", lambda buf, ops: calls.append(ops) or real(buf, ops)
+    )
+    warm, ex_warm = run_thread(corpus, program, cache_dir, workers=1)
+    assert warm == cold
+    # unchanged expression plan: 100% cache hits, zero expression ops run
+    # (the where() predicate still evaluates — row sets are not cached —
+    # but its raw-column reads carry empty op chains)
+    assert ex_warm.cache_hits == 6 and ex_warm.cache_misses == 0
+    assert all(len(ops) == 0 for ops in calls)
+
+
+def test_changing_one_expression_recomputes_only_its_column(corpus, tmp_path):
+    from repro.core.expr import col
+
+    cache_dir = tmp_path / "cache"
+    abstract = col("abstract").lower().keep_letters().collapse_spaces()
+    v1 = expr_program(corpus, col("title").lower(), abstract)
+    run_thread(corpus, v1, cache_dir)
+
+    v2 = expr_program(corpus, col("title").lower().min_word_len(3), abstract)
+    _, ex = run_thread(corpus, v2, cache_dir)
+    # title's expression changed → 3 shard misses; abstract keeps hitting
+    assert ex.cache_hits == 3 and ex.cache_misses == 3
+
+    # a predicate change alters the row set → both columns recompute
+    v3 = expr_program(
+        corpus, col("title").lower().min_word_len(3), abstract,
+        pred=col("abstract").word_count() >= 1,
+    )
+    _, ex3 = run_thread(corpus, v3, cache_dir)
+    assert ex3.cache_hits == 0 and ex3.cache_misses == 6
+
+
+def test_concat_expression_caches_and_invalidates(corpus, tmp_path):
+    from repro.core.expr import col, concat
+
+    cache_dir = tmp_path / "cache"
+
+    def prog(sep):
+        ds = Dataset.from_json_dirs([corpus], FIELDS).with_column(
+            "both", concat(col("title"), col("abstract"), sep=sep)
+        )
+        return program_for(ds)
+
+    first, ex1 = run_thread(corpus, prog(" | "), cache_dir)
+    assert ex1.cache_misses == 3  # one derived column x 3 shards
+    again, ex2 = run_thread(corpus, prog(" | "), cache_dir)
+    assert again == first and ex2.cache_hits == 3 and ex2.cache_misses == 0
+    _, ex3 = run_thread(corpus, prog(" # "), cache_dir)  # sep is a parameter
+    assert ex3.cache_misses == 3 and ex3.cache_hits == 0
 
 
 # ---------------------------------------------------------------------------
