@@ -12,7 +12,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.p3sapp_summarizer import SMOKE as S2S_CFG
 from repro.core.p3sapp import run_conventional, run_p3sapp

@@ -1,0 +1,84 @@
+"""Perf-regression gate over the tokenize benchmark baseline.
+
+CI runs ``python -m benchmarks.bench_preprocessing --tokenize --quick``
+(which rewrites ``benchmarks/results/tokenize.csv``) after copying the
+committed CSV aside, then calls this script to compare the fresh
+``tokens_per_s`` of every ``(dataset_id, mode)`` row against the baseline.
+A row slower than ``baseline * (1 - max_regression)`` fails the gate; rows
+present in the baseline but missing from the fresh run fail too (a
+silently skipped leg must not read as a pass).
+
+Refresh the committed baseline by re-running the bench on the reference
+machine and committing the regenerated CSV. The baseline is absolute
+throughput: regenerate it when the CI runner class changes, or loosen
+``--max-regression`` if the runner fleet is heterogeneous.
+"""
+
+import argparse
+import csv
+import sys
+from pathlib import Path
+
+METRIC = "tokens_per_s"
+KEY_FIELDS = ("dataset_id", "mode")
+
+
+def load_rows(path):
+    with open(path, newline="") as fh:
+        return {
+            tuple(row[k] for k in KEY_FIELDS): float(row[METRIC])
+            for row in csv.DictReader(fh)
+            if row.get(METRIC)
+        }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=Path, required=True)
+    ap.add_argument("--fresh", type=Path, required=True)
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.30,
+        help="fail when fresh tokens/sec drops more than this fraction",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    if not baseline:
+        print(f"no baseline rows with {METRIC!r} in {args.baseline}")
+        return 1
+
+    failures = []
+    for key in sorted(baseline):
+        base = baseline[key]
+        got = fresh.get(key)
+        label = "/".join(key)
+        if got is None:
+            failures.append(f"{label}: missing from fresh run")
+            continue
+        floor = base * (1.0 - args.max_regression)
+        delta = 100.0 * (got / base - 1.0)
+        status = "OK" if got >= floor else "REGRESSION"
+        print(
+            f"{label}: baseline {base:,.0f} tok/s, "
+            f"fresh {got:,.0f} tok/s ({delta:+.1f}%) {status}"
+        )
+        if got < floor:
+            failures.append(
+                f"{label}: {got:,.0f} < floor {floor:,.0f} tok/s "
+                f"({delta:+.1f}% vs baseline)"
+            )
+    if failures:
+        print()
+        print(f"perf gate failed ({len(failures)} row(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"perf gate passed: {len(baseline)} row(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,9 +10,7 @@ container scale. Generated corpora are cached under /tmp.
 from __future__ import annotations
 
 import csv
-import io
 import json
-import sys
 from pathlib import Path
 
 from repro.data.synthetic import write_corpus

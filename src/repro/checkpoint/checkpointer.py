@@ -97,7 +97,7 @@ class Checkpointer:
         file I/O runs in a background thread so the train loop never
         blocks on disk. ``wait()`` joins + re-raises."""
         self.wait()
-        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work() -> None:
             try:

@@ -22,7 +22,6 @@ from pathlib import Path
 from typing import Any, Callable, Iterator, Sequence
 
 import jax
-import numpy as np
 
 _SENTINEL = object()
 

@@ -242,19 +242,30 @@ class Dataset:
         return self._derive(P.Tokenize(tokenizer, specs), [s.name for s in specs])
 
     # -- vocabulary fitting (terminal; Spark CountVectorizer-style) --------
-    def _counts_can_stream(self) -> bool:
+    def _counts_mode(self) -> str:
+        """How ``fit_vocab`` counts: ``"stream"`` (one pass through the
+        shard executors), ``"two-pass"`` (canonical-survivor dedup
+        election, then a counting pass over the survivors — the streaming
+        protocol for partial-subset ``drop_duplicates``), or ``"whole"``
+        (count the materialized frame)."""
         owner = self._frame_prefix_dataset()
         if self._has_memoized_frame():
-            return False  # already materialized: count that frame
+            return "whole"  # already materialized: count that frame
         if not isinstance(owner._nodes[0], P.SourceJsonDirs):
-            return False
+            return "whole"
+        if any(isinstance(n, P.Split) for n in owner._nodes):
+            return "whole"  # whole-frame only
         src_fields = set(owner._nodes[0].fields)
-        for n in owner._nodes:
-            if isinstance(n, P.Split):
-                return False  # whole-frame only
-            if isinstance(n, P.DropDuplicates) and not set(n.subset) >= src_fields:
-                return False  # partial-subset dedup is scheduling-dependent
-        return True
+        dedups = [n for n in owner._nodes if isinstance(n, P.DropDuplicates)]
+        partial = [d for d in dedups if not set(d.subset) >= src_fields]
+        if not partial:
+            return "stream"  # full-subset dedup: duplicate rows interchange
+        if len(dedups) == 1:
+            return "two-pass"
+        # A partial-subset dedup stacked with another dedup: the election
+        # pass would itself run under scheduling-dependent cross-shard
+        # state, so fall back to the exact whole-frame count.
+        return "whole"
 
     def fit_vocab(
         self,
@@ -278,7 +289,14 @@ class Dataset:
         the identical vocabulary: counter merge is commutative and the
         ranking tie-break is deterministic (count desc, word asc). With
         the shard cache enabled, per-shard counts are cached too — a
-        refit over unchanged data and plan reads no shard at all."""
+        refit over unchanged data and plan reads no shard at all.
+
+        Plans with a partial-subset ``drop_duplicates`` stream too, via
+        the two-pass canonical-survivor protocol: pass 1 emits per-row
+        dedup-key digests, the driver elects each key's first occurrence
+        in deterministic ``(shard, row)`` order, and pass 2 counts only
+        the elected survivors — byte-identical to the whole-frame fit on
+        every executor (see :func:`repro.core.executor.split_dedup_programs`)."""
         from . import executor as EX
         from . import ingest as ing
 
@@ -289,19 +307,32 @@ class Dataset:
             raise KeyError(f"unknown columns {unknown}; schema is {list(owner.schema)}")
         counts: Counter = Counter()
         n_workers = self._resolve_workers(workers, default=2)
-        if self._counts_can_stream():
+        mode = self._counts_mode()
+        if mode != "whole":
             frame_nodes, _ = P.split_plan(owner._nodes)
             if optimize:
                 frame_nodes = P.optimize_plan(frame_nodes, cols)
-            program = EX.compile_shard_program(
-                frame_nodes, optimize=optimize, output_columns=cols, count_words=cols
-            )
-            exec_ = EX.make_executor(
-                ing.list_shards(frame_nodes[0].directories),
-                program,
+            exec_kw = dict(
                 workers=n_workers,
                 cache_dir=self._resolve_cache_dir(),
                 executor=executor or self._options.get("executor"),
+            )
+            shards = ing.list_shards(frame_nodes[0].directories)
+            row_filters = None
+            if mode == "two-pass":
+                pass1, program = EX.split_dedup_programs(
+                    frame_nodes, optimize=optimize, count_columns=cols
+                )
+                row_filters = self._elect_survivors(
+                    shards, pass1, exec_kw, stats
+                )
+            else:
+                program = EX.compile_shard_program(
+                    frame_nodes, optimize=optimize, output_columns=cols,
+                    count_words=cols,
+                )
+            exec_ = EX.make_executor(
+                shards, program, row_filters=row_filters, **exec_kw
             )
             try:
                 for res in exec_:
@@ -311,6 +342,7 @@ class Dataset:
                 exec_.stop()
                 if stats is not None:
                     stats["executor"] = exec_.name
+                    stats["two_pass"] = mode == "two-pass"
                     stats["token_cache_hits"] = (
                         stats.get("token_cache_hits", 0) + exec_.token_cache_hits
                     )
@@ -328,6 +360,53 @@ class Dataset:
                 for t in frame[col]:
                     counts.update((t or "").split())
         return WordTokenizer.from_counts(counts, vocab_size)
+
+    def _elect_survivors(
+        self, shards, pass1, exec_kw: dict, stats: dict | None
+    ) -> dict[int, np.ndarray]:
+        """Pass 1 of two-pass dedup: run the key-election program over
+        every shard and keep, per key digest, the minimal ``(shard index,
+        row index)`` occurrence — the row whole-frame keep-first dedup
+        retains. Returns per-shard sorted survivor row indices (an entry
+        for every shard, possibly empty)."""
+        from . import executor as EX
+
+        survivors: dict[bytes, tuple[int, int]] = {}
+        exec1 = EX.make_executor(shards, pass1, **exec_kw)
+        try:
+            for res in exec1:
+                keys = res.tokens.get(EX.DEDUP_KEYS)
+                if keys is None or not len(keys):
+                    continue
+                si = res.shard_index
+                # Within-shard first occurrence per key is vectorized
+                # (np.unique on the 16-byte digests); only the per-shard
+                # uniques cross into the Python merge loop.
+                voids = np.ascontiguousarray(keys).view(
+                    np.dtype((np.void, 16))
+                ).reshape(-1)
+                uniq, first = np.unique(voids, return_index=True)
+                for k_void, ri in zip(uniq, first):
+                    k = k_void.tobytes()
+                    best = survivors.get(k)
+                    if best is None or (si, int(ri)) < best:
+                        survivors[k] = (si, int(ri))
+        finally:
+            exec1.stop()
+            if stats is not None:
+                stats["token_cache_hits"] = (
+                    stats.get("token_cache_hits", 0) + exec1.token_cache_hits
+                )
+                stats["token_cache_misses"] = (
+                    stats.get("token_cache_misses", 0) + exec1.token_cache_misses
+                )
+        per_shard: dict[int, list[int]] = {i: [] for i in range(len(shards))}
+        for si, ri in survivors.values():
+            per_shard[si].append(ri)
+        return {
+            i: np.sort(np.asarray(rows, dtype=np.int64))
+            for i, rows in per_shard.items()
+        }
 
     def _resolve_bucket_widths(
         self, spec: TokenSpec, widths: Sequence[int] | None, n_buckets: int

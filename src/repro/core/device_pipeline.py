@@ -9,7 +9,6 @@ interpret mode (correctness path); on TPU it is a single VMEM pass.
 
 from __future__ import annotations
 
-import numpy as np
 
 from ..kernels.text_clean.ops import clean_rows
 from .frame import ColumnarFrame

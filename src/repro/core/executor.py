@@ -88,10 +88,65 @@ def _vocab_table(tp: "TokenPlan") -> VocabTable:
 # Step kinds: ("select", cols) | ("dropna", cols) | ("dedup", cols)
 #           | ("project", ((out_col, compiled_expr), ...))
 #           | ("filter", compiled_pred)
+#           | ("dedup_emit", cols)   pass 1 of two-pass dedup: emit per-row
+#                                    key digests of ``cols`` (no row change)
+#           | ("dedup_take", cols)   pass 2: keep only the executor-provided
+#                                    canonical-survivor rows for this shard
 # Compiled expressions/predicates are the plain-tuple programs of
 # :mod:`repro.core.expr` — picklable, so the same program runs in a reader
 # thread or a worker process.
 Step = tuple[str, Any]
+
+# Reserved token-space product name for two-pass dedup key digests: a
+# ``(rows, 4)`` int32 view of 16-byte blake2b digests, so pass-1 keys ride
+# the exact token-array transport and cache paths.
+DEDUP_KEYS = "__dedup_keys__"
+
+
+def _has_step(program: "ShardProgram", kind: str) -> bool:
+    return any(k == kind for k, _ in program.steps)
+
+
+def _dedup_key_digests(cols: Sequence[Sequence], n: int) -> np.ndarray:
+    """Per-row 16-byte digests of the dedup-subset values, injectively
+    serialized (type tag + length prefix), viewed as ``(n, 4)`` int32.
+    Digest equality stands in for the value-tuple equality whole-frame
+    ``drop_duplicates`` uses (blake2b-128: collisions are negligible
+    against any real corpus size)."""
+    out = np.empty((n, 4), dtype=np.int32)
+    for i in range(n):
+        h = hashlib.blake2b(digest_size=16)
+        for col in cols:
+            v = col[i]
+            if v is None:
+                b_ = b"\x00"
+            elif isinstance(v, str):
+                b_ = b"\x01" + v.encode("utf-8", "surrogatepass")
+            elif isinstance(v, (bool, int, float)):
+                # Match the Python equality classes the whole-frame
+                # tuple-key dedup uses: True == 1 == 1.0 and 0.0 == -0.0
+                # must serialize identically; NaN never equals anything,
+                # so each occurrence gets a unique nonce.
+                if v != v:  # NaN
+                    # NaN never equals anything (whole-frame keeps every
+                    # NaN row), so each occurrence gets a random nonce —
+                    # unique across rows, shards, and cached passes.
+                    b_ = b"\x03nan" + os.urandom(8)
+                else:
+                    try:
+                        exact = float(v) == v
+                    except OverflowError:  # int beyond float range
+                        exact = False
+                    if exact:
+                        b_ = b"\x03" + repr(float(v) + 0.0).encode()
+                    else:
+                        b_ = b"\x03" + repr(int(v)).encode()
+            else:
+                b_ = b"\x02" + repr(v).encode("utf-8")
+            h.update(len(b_).to_bytes(8, "little"))
+            h.update(b_)
+        out[i] = np.frombuffer(h.digest(), dtype=np.int32)
+    return out
 
 
 @dataclass(frozen=True)
@@ -192,9 +247,12 @@ def _lineage_fingerprints(
     columns are uncacheable (e.g. a predicate that cannot be
     fingerprinted, such as a lambda). Returns None when the whole program
     is uncacheable: ``dedup`` holds cross-shard state, so a shard's output
-    is not a pure function of (shard bytes, program).
+    is not a pure function of (shard bytes, program) — and neither is a
+    ``dedup_take`` shard, whose surviving rows are elected from the whole
+    corpus. (``dedup_emit`` stays cacheable: the key digests are a pure
+    per-shard function of the prefix.)
     """
-    if program.has_dedup:
+    if program.has_dedup or _has_step(program, "dedup_take"):
         return None
 
     def h(sig: bytes) -> bytes:
@@ -331,6 +389,85 @@ def count_fingerprint(program: ShardProgram) -> str | None:
         parts.append(f"{c}={fp}")
     sig = "counts|" + "|".join(parts)
     return hashlib.blake2b(sig.encode(), digest_size=16).hexdigest()
+
+
+def dedup_keys_fingerprint(program: ShardProgram) -> str | None:
+    """Cache-key fingerprint for a shard's two-pass dedup key digests: the
+    final lineage fingerprints of the subset columns (the keys are a pure
+    function of those buffers and the surviving prefix rows). None when
+    the program emits no keys or any subset column is uncacheable."""
+    subset = next(
+        (arg for kind, arg in program.steps if kind == "dedup_emit"), None
+    )
+    if subset is None:
+        return None
+    walked = _lineage_fingerprints(program)
+    if walked is None:
+        return None
+    final = walked[1]
+    parts = []
+    for c in subset:
+        fp = final.get(c)
+        if fp is None:
+            return None
+        parts.append(f"{c}={fp}")
+    sig = "dedupkeys|" + "|".join(parts)
+    return hashlib.blake2b(sig.encode(), digest_size=16).hexdigest()
+
+
+def split_dedup_programs(
+    frame_nodes: Sequence[Any],
+    *,
+    optimize: bool = True,
+    count_columns: Sequence[str] = (),
+) -> tuple[ShardProgram, ShardProgram]:
+    """Compile the two programs of two-pass canonical-survivor dedup.
+
+    The plan must hold exactly one ``DropDuplicates`` node. Pass 1 runs
+    the plan prefix up to it — re-planned against the dedup subset, so
+    transforms that only feed the counted columns are pruned away — and
+    emits per-row key digests (``dedup_emit``). The driver merges the
+    digests, electing the first occurrence in deterministic
+    ``(shard index, row index)`` order — exactly the row whole-frame
+    keep-first dedup retains. Pass 2 re-runs the full plan with the dedup
+    step replaced by ``dedup_take`` of the elected survivor rows, so the
+    stream stays a pure per-shard program (process-executor capable, no
+    cross-shard mutable state) yet byte-identical to whole-frame.
+    """
+    from . import plan as P
+
+    idxs = [
+        i for i, n in enumerate(frame_nodes) if isinstance(n, P.DropDuplicates)
+    ]
+    if len(idxs) != 1:
+        raise UnsupportedPlanError(
+            f"two-pass dedup requires exactly one DropDuplicates node, "
+            f"found {len(idxs)}"
+        )
+    j = idxs[0]
+    subset = tuple(frame_nodes[j].subset)
+    prefix = list(frame_nodes[:j])
+    if optimize:
+        prefix = P.optimize_plan(prefix, subset)
+    pass1 = compile_shard_program(prefix, optimize=optimize)
+    pass1 = dataclasses.replace(
+        pass1, steps=pass1.steps + (("dedup_emit", subset),)
+    )
+    full = compile_shard_program(
+        frame_nodes,
+        optimize=optimize,
+        output_columns=count_columns,
+        count_words=count_columns,
+    )
+    steps2 = list(full.steps)
+    if steps2[j - 1] != ("dedup", subset):  # nodes[1:] map 1:1 to steps
+        raise UnsupportedPlanError(
+            f"plan-to-step mapping drift: expected dedup at step {j - 1}, "
+            f"found {steps2[j - 1]!r}"
+        )
+    steps2[j - 1] = ("dedup_take", subset)
+    pass2 = dataclasses.replace(full, steps=tuple(steps2))
+    return pass1, pass2
 
 
 # ---------------------------------------------------------------------------
@@ -474,6 +611,11 @@ class ShardResult:
     word_counts: Counter | None = None
     # Flat buffers not yet folded into ``frame`` (materialize=False only).
     flat: dict = dataclasses.field(default_factory=dict)
+    # Which shard (position in the executor's shard list) produced this
+    # result — arrival order is nondeterministic under work stealing, so
+    # consumers that need a deterministic ordering (two-pass dedup
+    # election) key on this instead.
+    shard_index: int = -1
 
 
 class GlobalDedup:
@@ -532,6 +674,11 @@ def _run_project_step(
     cacheable = cache is not None and step_fps is not None and digest is not None
 
     for out_col, comp in entries:
+        if comp[0] == "chain" and not comp[2]:
+            # Pure alias (a CSE consumer whose whole chain was hoisted):
+            # share the memoized buffer; no lookup, no hit/miss counted.
+            flat[out_col] = lookup(comp[1])
+            continue
         key = None
         if cacheable:
             fp = step_fps.get(out_col)
@@ -556,12 +703,14 @@ def _cached_product_keys(
     token_fps: dict[str, str] | None,
     count_fp: str | None,
     digest: str | None,
+    dedup_fp: str | None = None,
 ) -> list[str] | None:
     """Cache keys of every token-space product the program emits, or None
     when the program/cache cannot serve a shard from cache at all."""
     if cache is None or digest is None:
         return None
-    if program.tokens is None and not program.count_words:
+    emits_keys = _has_step(program, "dedup_emit")
+    if program.tokens is None and not program.count_words and not emits_keys:
         return None
     keys: list[str] = []
     if program.tokens is not None:
@@ -575,6 +724,10 @@ def _cached_product_keys(
         if count_fp is None:
             return None
         keys.append(cache.key(digest, "__word_counts__", count_fp))
+    if emits_keys:
+        if dedup_fp is None:
+            return None
+        keys.append(cache.key(digest, DEDUP_KEYS, dedup_fp))
     return keys
 
 
@@ -584,10 +737,13 @@ def products_fully_cached(
     token_fps: dict[str, str] | None,
     count_fp: str | None,
     digest: str,
+    dedup_fp: str | None = None,
 ) -> bool:
     """Cheap existence probe for the full-shard fast path (the process
     executor's feeder uses it to skip the shared-memory copy entirely)."""
-    keys = _cached_product_keys(program, cache, token_fps, count_fp, digest)
+    keys = _cached_product_keys(
+        program, cache, token_fps, count_fp, digest, dedup_fp
+    )
     return keys is not None and all(cache.contains(k) for k in keys)
 
 
@@ -597,14 +753,17 @@ def _load_cached_products(
     token_fps: dict[str, str] | None,
     count_fp: str | None,
     digest: str | None,
+    dedup_fp: str | None = None,
 ) -> ShardResult | None:
     """Serve a shard entirely from the token-space cache: when every
-    product the program emits (all token arrays, the word counts) is
-    cached under the current fingerprints, the shard needs no parse, no
-    cleaning, and no encode. None → run the program normally."""
+    product the program emits (all token arrays, the word counts, the
+    two-pass dedup key digests) is cached under the current fingerprints,
+    the shard needs no parse, no cleaning, and no encode. None → run the
+    program normally."""
     if cache is None or digest is None:
         return None
-    if program.tokens is None and not program.count_words:
+    emits_keys = _has_step(program, "dedup_emit")
+    if program.tokens is None and not program.count_words and not emits_keys:
         return None
     tokens: dict[str, np.ndarray] = {}
     hits = 0
@@ -628,6 +787,14 @@ def _load_cached_products(
         if counts is None:
             return None
         hits += 1
+    if emits_keys:
+        if dedup_fp is None:
+            return None
+        arr = cache.load_tokens(cache.key(digest, DEDUP_KEYS, dedup_fp), 4)
+        if arr is None:
+            return None
+        tokens[DEDUP_KEYS] = arr
+        hits += 1
     result = ShardResult(ColumnarFrame({}))
     result.tokens = tokens
     result.word_counts = counts
@@ -644,7 +811,9 @@ def execute_program(
     col_fps: dict[int, dict[str, str]] | None = None,
     token_fps: dict[str, str] | None = None,
     count_fp: str | None = None,
+    dedup_fp: str | None = None,
     digest: str | None = None,
+    row_take: np.ndarray | None = None,
     materialize: bool = True,
 ) -> ShardResult:
     """Run every step of ``program`` on one parsed shard frame.
@@ -714,6 +883,39 @@ def execute_program(
                     frame = frame.ensure_column(c).with_flat(c, flat.pop(c))
                     src_flat.pop(c, None)
             keep = dedups[step_idx].keep_mask(frame)
+            take_rows(keep)
+        elif kind == "dedup_emit":
+            # Pass 1 of two-pass dedup: per-row key digests of the subset
+            # columns at this point (rows unchanged). Cacheable — the
+            # digests are a pure per-shard function of the prefix.
+            keys_arr = None
+            key = None
+            if cache is not None and dedup_fp is not None and digest is not None:
+                key = cache.key(digest, DEDUP_KEYS, dedup_fp)
+                keys_arr = cache.load_tokens(key, 4)
+                if keys_arr is not None and len(keys_arr) == len(frame):
+                    result.token_cache_hits += 1
+                else:
+                    keys_arr = None
+            if keys_arr is None:
+                vals = [
+                    B.unflatten(flat[c]) if c in flat else list(frame[c])
+                    for c in arg
+                ]
+                keys_arr = _dedup_key_digests(vals, len(frame))
+                if key:
+                    result.token_cache_misses += 1
+                    cache.store(key, keys_arr)
+            result.tokens[DEDUP_KEYS] = keys_arr
+        elif kind == "dedup_take":
+            # Pass 2: keep exactly the canonical-survivor rows the driver
+            # elected for this shard (row indices at this plan point).
+            if row_take is None:
+                raise UnsupportedPlanError(
+                    "dedup_take step requires executor-provided survivor rows"
+                )
+            keep = np.zeros(len(frame), dtype=bool)
+            keep[np.asarray(row_take, dtype=np.int64)] = True
             take_rows(keep)
         elif kind == "project":
             step_fps = col_fps.get(step_idx) if col_fps is not None else None
@@ -828,6 +1030,7 @@ class ThreadShardExecutor:
         *,
         workers: int = 2,
         cache_dir: str | Path | None = None,
+        row_filters: dict[int, np.ndarray] | None = None,
     ):
         self.program = program
         self.cache_hits = 0
@@ -838,6 +1041,9 @@ class ThreadShardExecutor:
         self._col_fps = step_column_fingerprints(program) if self._cache else None
         self._token_fps = token_fingerprints(program) if self._cache else None
         self._count_fp = count_fingerprint(program) if self._cache else None
+        self._dedup_fp = dedup_keys_fingerprint(program) if self._cache else None
+        self._row_filters = row_filters
+        self._shard_idx = {Path(s): i for i, s in enumerate(shards)}
         self._dedups = {
             i: GlobalDedup(arg)
             for i, (kind, arg) in enumerate(program.steps)
@@ -851,14 +1057,17 @@ class ThreadShardExecutor:
         )
 
     def _process(self, path: Path) -> ShardResult:
+        idx = self._shard_idx[path]
         t0 = time.perf_counter()
         if self._cache is not None:
             data, digest = ing.read_shard_bytes(path)
             fast = _load_cached_products(
-                self.program, self._cache, self._token_fps, self._count_fp, digest
+                self.program, self._cache, self._token_fps, self._count_fp,
+                digest, self._dedup_fp,
             )
             if fast is not None:
                 fast.parse_s = time.perf_counter() - t0
+                fast.shard_index = idx
                 return fast
             frame = ing.parse_shard_bytes(data, self.program.fields)
         else:
@@ -873,12 +1082,23 @@ class ThreadShardExecutor:
             col_fps=self._col_fps,
             token_fps=self._token_fps,
             count_fp=self._count_fp,
+            dedup_fp=self._dedup_fp,
             digest=digest,
-            # Token/count products are the output; folding flat buffers
+            row_take=(
+                self._row_filters.get(idx)
+                if self._row_filters is not None
+                else None
+            ),
+            # Token/count/key products are the output; folding flat buffers
             # back into the frame would be wasted decode work.
-            materialize=self.program.tokens is None and not self.program.count_words,
+            materialize=(
+                self.program.tokens is None
+                and not self.program.count_words
+                and not _has_step(self.program, "dedup_emit")
+            ),
         )
         res.parse_s = parse_s
+        res.shard_index = idx
         return res
 
     def _account(self, res: ShardResult) -> None:
@@ -1030,26 +1250,35 @@ def _unpack_tokens(payload: memoryview, metas: list[dict]) -> dict[str, np.ndarr
 
 
 def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
-    """Worker process: pull (task_id, shm_name, meta, digest) tasks until
-    sentinel. ``meta`` is the byte count of the shared-memory segment —
-    or, when ``shm_name`` is None (feeder's fully-cached fast path, no
-    shm copy made), the shard's file path for the rare fallback re-read
-    (an entry vanished or corrupted between probe and load)."""
+    """Worker process: pull (task_id, shm_name, meta, digest, row_take)
+    tasks until sentinel. ``meta`` is the byte count of the shared-memory
+    segment — or, when ``shm_name`` is None (feeder's fully-cached fast
+    path, no shm copy made), the shard's file path for the rare fallback
+    re-read (an entry vanished or corrupted between probe and load).
+    ``row_take`` is the shard's canonical-survivor rows for a
+    ``dedup_take`` program (None otherwise)."""
     from multiprocessing import shared_memory
 
     cache = ShardCache(cache_dir) if cache_dir is not None else None
     col_fps = step_column_fingerprints(program) if cache is not None else None
     token_fps = token_fingerprints(program) if cache is not None else None
     count_fp = count_fingerprint(program) if cache is not None else None
-    token_space = program.tokens is not None or bool(program.count_words)
+    dedup_fp = dedup_keys_fingerprint(program) if cache is not None else None
+    token_space = (
+        program.tokens is not None
+        or bool(program.count_words)
+        or _has_step(program, "dedup_emit")
+    )
     while True:
         task = task_q.get()
         if task is None:
             break
-        task_id, shm_name, meta, digest = task
+        task_id, shm_name, meta, digest, row_take = task
         try:
             t0 = time.perf_counter()
-            res = _load_cached_products(program, cache, token_fps, count_fp, digest)
+            res = _load_cached_products(
+                program, cache, token_fps, count_fp, digest, dedup_fp
+            )
             if res is None:
                 if shm_name is None:
                     with open(meta, "rb") as fh:
@@ -1068,7 +1297,9 @@ def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
                     col_fps=col_fps,
                     token_fps=token_fps,
                     count_fp=count_fp,
+                    dedup_fp=dedup_fp,
                     digest=digest,
+                    row_take=row_take,
                     materialize=False,
                 )
             res.parse_s = time.perf_counter() - t0 - res.tokenize_s - (
@@ -1138,11 +1369,13 @@ class ProcessShardExecutor:
         workers: int = 2,
         cache_dir: str | Path | None = None,
         max_inflight: int | None = None,
+        row_filters: dict[int, np.ndarray] | None = None,
     ):
         if program.has_dedup:
             raise UnsupportedPlanError(
                 "drop_duplicates needs cross-shard state; use the thread executor"
             )
+        self._row_filters = row_filters
         self.program = program
         self.cache_hits = 0
         self.cache_misses = 0
@@ -1156,6 +1389,7 @@ class ProcessShardExecutor:
         self._cache = ShardCache(cache_dir) if cache_dir is not None else None
         self._token_fps = token_fingerprints(program) if self._cache else None
         self._count_fp = count_fingerprint(program) if self._cache else None
+        self._dedup_fp = dedup_keys_fingerprint(program) if self._cache else None
         self._shards = [Path(s) for s in shards]
         self._stopped = threading.Event()
         self._feed_errors: list[BaseException] = []
@@ -1196,19 +1430,25 @@ class ProcessShardExecutor:
                 if self._stopped.is_set():
                     return
                 data, digest = ing.read_shard_bytes(path)
+                row_take = (
+                    self._row_filters.get(i)
+                    if self._row_filters is not None
+                    else None
+                )
                 if products_fully_cached(
-                    self.program, self._cache, self._token_fps, self._count_fp, digest
+                    self.program, self._cache, self._token_fps,
+                    self._count_fp, digest, self._dedup_fp,
                 ):
                     # Fully cached: no shm copy; ship the path so the
                     # worker can fall back to its own read if an entry
                     # vanishes between this probe and its load.
-                    self._task_q.put((i, None, str(path), digest))
+                    self._task_q.put((i, None, str(path), digest, row_take))
                     continue
                 seg = shared_memory.SharedMemory(create=True, size=max(len(data), 1))
                 seg.buf[: len(data)] = data
                 with self._seg_lock:
                     self._in_segs[i] = seg.name
-                self._task_q.put((i, seg.name, len(data), digest))
+                self._task_q.put((i, seg.name, len(data), digest, row_take))
                 seg.close()
         except BaseException as e:  # deleted shard, /dev/shm full, ...
             # Surface the real cause to the consumer; without this the
@@ -1306,6 +1546,7 @@ class ProcessShardExecutor:
                 token_cache_misses=body.get("token_cache_misses", 0),
             )
             res.tokens = tokens
+            res.shard_index = task_id
             counts = body.get("word_counts")
             res.word_counts = Counter(counts) if counts is not None else None
             yield res
@@ -1388,6 +1629,7 @@ def make_executor(
     workers: int = 2,
     cache_dir: str | Path | None = None,
     executor: str | None = None,
+    row_filters: dict[int, np.ndarray] | None = None,
 ):
     """Pick the physical shard executor.
 
@@ -1431,7 +1673,9 @@ def make_executor(
     if choice == "process":
         return ProcessShardExecutor(
             shards, program, workers=n_proc, cache_dir=cache_dir,
+            row_filters=row_filters,
         )
     return ThreadShardExecutor(
         shards, program, workers=workers, cache_dir=cache_dir,
+        row_filters=row_filters,
     )

@@ -421,6 +421,92 @@ class NotOp(Pred):
 
 
 # ---------------------------------------------------------------------------
+# Plan-level rewriting support (CSE + conjunct splitting; see core.plan)
+# ---------------------------------------------------------------------------
+
+
+def split_conjuncts(p: Pred) -> list[Pred]:
+    """Flatten nested ``&`` into the ordered list of conjuncts."""
+    if isinstance(p, BoolOp) and p.kind == "and":
+        return split_conjuncts(p.left) + split_conjuncts(p.right)
+    return [p]
+
+
+def and_all(preds: Sequence[Pred]) -> Pred:
+    """Rebuild a conjunction left-associatively (inverse of
+    :func:`split_conjuncts` up to grouping)."""
+    out = preds[0]
+    for p in preds[1:]:
+        out = BoolOp("and", out, p)
+    return out
+
+
+def pred_exprs(p: Pred) -> list[Expr]:
+    """The string expressions a predicate evaluates (one per comparison
+    leaf, in evaluation order)."""
+    if isinstance(p, (NotEmpty, Contains)):
+        return [p.input]
+    if isinstance(p, Compare):
+        return [p.left.input]
+    if isinstance(p, (BoolOp,)):
+        return pred_exprs(p.left) + pred_exprs(p.right)
+    if isinstance(p, NotOp):
+        return pred_exprs(p.input)
+    raise TypeError(f"not a predicate: {p!r}")
+
+
+def map_pred_exprs(p: Pred, fn: Callable[[Expr], Expr]) -> Pred:
+    """Rebuild a predicate with ``fn`` applied to every string-expression
+    leaf (used by the optimizer's CSE rewrite)."""
+    if isinstance(p, NotEmpty):
+        return NotEmpty(fn(p.input))
+    if isinstance(p, Contains):
+        return Contains(fn(p.input), p.needle)
+    if isinstance(p, Compare):
+        return Compare(WordCount(fn(p.left.input)), p.op, p.right)
+    if isinstance(p, BoolOp):
+        return BoolOp(p.kind, map_pred_exprs(p.left, fn), map_pred_exprs(p.right, fn))
+    if isinstance(p, NotOp):
+        return NotOp(map_pred_exprs(p.input, fn))
+    raise TypeError(f"not a predicate: {p!r}")
+
+
+def resolved_signature(
+    e: Expr, versions: dict[str, bytes | None]
+) -> bytes | None:
+    """Version-resolved structural signature: :meth:`Expr.signature` with
+    every ``col()`` leaf replaced by the column's current *version token*
+    (what the column holds at this point of a plan, not its name). Two
+    sub-expressions with equal resolved signatures evaluate to the same
+    bytes per surviving row wherever they sit in the plan — the soundness
+    condition for common-subexpression elimination. ``None`` marks an
+    unfingerprintable subtree (lambda word predicate, poisoned input
+    version): never considered equal to anything."""
+    if isinstance(e, Col):
+        v = versions.get(e.name, b"src:" + e.name.encode())
+        return None if v is None else b"ver:" + v
+    if isinstance(e, Lit):
+        return e.signature()
+    if isinstance(e, StrOp):
+        base = resolved_signature(e.input, versions)
+        if base is None:
+            return None
+        try:
+            osig = B.op_signature(e.op)
+        except B.UnfingerprintableOpError:
+            return None
+        return _len_prefixed([base, b"op:" + osig])
+    if isinstance(e, Concat):
+        parts = [resolved_signature(p, versions) for p in e.parts]
+        if any(s is None for s in parts):
+            return None
+        return b"concat:" + e.sep.encode() + b":" + _len_prefixed(
+            [s for s in parts if s is not None]
+        )
+    raise TypeError(f"cannot sign expression {e!r}")
+
+
+# ---------------------------------------------------------------------------
 # Canonical case-study expressions (paper Fig. 2 / Fig. 3, expression form)
 # ---------------------------------------------------------------------------
 

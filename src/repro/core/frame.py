@@ -7,7 +7,7 @@ on flat byte buffers (:mod:`repro.core.bytesops`) via the Pipeline.
 
 from __future__ import annotations
 
-from typing import Iterable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 

@@ -12,7 +12,6 @@ process pool; on this 1-core container it degrades gracefully to serial.
 from __future__ import annotations
 
 import hashlib
-import os
 from concurrent.futures import ProcessPoolExecutor
 from pathlib import Path
 from typing import Iterable, Sequence

@@ -11,13 +11,17 @@ not just the cleaning segment:
   ``Project`` carries ``(out_col, expression)`` entries and ``Filter`` a
   row predicate — both from the column-expression IR
   (:mod:`repro.core.expr`); the legacy ``Stage`` verbs lower to them.
-* **Optimizer** (:func:`optimize_plan`) — Catalyst-style rewrites:
-  adjacent ``Project`` nodes merge (their in-place chains then fuse via
-  ``bytesops.fuse_ops``), adjacent ``DropNA``/``Filter`` nodes merge, a
-  ``DropNA`` or ``Filter`` commutes backward past a ``Project`` that does
-  not write any column it reads (dropped rows are never cleaned), derived
-  columns nothing downstream reads are pruned, and a source-level liveness
-  pass projects away columns nothing downstream reads.
+* **Optimizer** (:func:`optimize_plan`) — Catalyst-style rewrites, all
+  exact: adjacent ``Project`` nodes merge (their in-place chains then fuse
+  via ``bytesops.fuse_ops``), adjacent ``DropNA``/``Filter`` nodes merge,
+  a ``DropNA`` or ``Filter`` commutes backward past a ``Project`` that
+  does not write any column it reads (dropped rows are never cleaned) —
+  splitting ``&``-conjunctions and ``DropNA`` subsets so the raw-column
+  half keeps moving when the derived half must stay
+  (:func:`_split_row_filter`) — derived columns nothing downstream reads
+  are pruned, a source-level liveness pass projects away columns nothing
+  downstream reads, and sub-expressions shared across consumers hoist
+  into ``__cse_*`` intermediates computed once (:func:`_cse_pass`).
 * **Physical executors** — :func:`execute_frame_plan` runs the frame-level
   prefix whole-frame with the paper's stage-timing attribution
   (:class:`StageTimings`), while :func:`stream_batches` runs the same plan
@@ -48,7 +52,6 @@ from ..data.batching import (
     pad_batch,
     split_indices,
 )
-from . import bytesops as B
 from . import expr as E
 from . import ingest as ing
 from .frame import ColumnarFrame
@@ -279,23 +282,55 @@ def _merge_adjacent(nodes: list[PlanNode]) -> list[PlanNode]:
     return out
 
 
+def _split_row_filter(a: Project, b: PlanNode) -> list[PlanNode] | None:
+    """Conjunct-split pushdown: a blocked conjunction filter splits at a
+    ``Project`` — conjuncts reading only columns the Project does not
+    write commute below it, conjuncts on derived columns stay put. Rows a
+    raw-column conjunct rejects are then never cleaned even when the same
+    ``where`` also constrains a derived column. ``None`` when no split
+    applies (single conjunct, or nothing/everything pushable)."""
+    written = a.written()
+    if isinstance(b, DropNA):
+        push = tuple(c for c in b.subset if c not in written)
+        stay = tuple(c for c in b.subset if c in written)
+        if push and stay:
+            return [DropNA(push), a, DropNA(stay)]
+        return None
+    assert isinstance(b, Filter)
+    conjuncts = E.split_conjuncts(b.pred)
+    if len(conjuncts) < 2:
+        return None
+    push = [c for c in conjuncts if not (c.inputs() & written)]
+    stay = [c for c in conjuncts if c.inputs() & written]
+    if push and stay:
+        return [Filter(E.and_all(push)), a, Filter(E.and_all(stay))]
+    return None
+
+
 def _pull_filters_back(nodes: list[PlanNode]) -> list[PlanNode]:
     """A row filter (``DropNA`` or ``Filter``) commutes backward past a
     ``Project`` that does not write any column the filter reads — dropped
     rows are then never flattened/cleaned. This generalizes the original
-    dropna pullback to arbitrary ``where`` predicates."""
+    dropna pullback to arbitrary ``where`` predicates. A filter that
+    cannot move as a unit splits at the conjunction: its raw-column
+    conjuncts keep commuting toward the source while the derived-column
+    conjuncts stay behind the Project (see :func:`_split_row_filter`)."""
     changed = True
     while changed:
         changed = False
-        for i in range(len(nodes) - 1):
+        i = 0
+        while i < len(nodes) - 1:
             a, b = nodes[i], nodes[i + 1]
-            if (
-                isinstance(a, Project)
-                and isinstance(b, (DropNA, Filter))
-                and not (_filter_read_cols(b) & a.written())
-            ):
-                nodes[i], nodes[i + 1] = b, a
-                changed = True
+            if isinstance(a, Project) and isinstance(b, (DropNA, Filter)):
+                if not (_filter_read_cols(b) & a.written()):
+                    nodes[i], nodes[i + 1] = b, a
+                    changed = True
+                else:
+                    split = _split_row_filter(a, b)
+                    if split is not None:
+                        nodes[i : i + 2] = split
+                        changed = True
+            i += 1
         nodes = _merge_adjacent(nodes)
     return nodes
 
@@ -351,6 +386,146 @@ def _prune_and_project(
     return nodes
 
 
+_CSE_PREFIX = "__cse_"
+
+
+def _cse_name(sig: bytes) -> str:
+    return _CSE_PREFIX + hashlib.blake2b(sig, digest_size=16).hexdigest()[:12]
+
+
+def _cse_pass(nodes: list[PlanNode], final_schema: Sequence[str]) -> list[PlanNode]:
+    """Cross-node common-subexpression elimination (exact).
+
+    Two walks over the frame plan, both tracking a per-column *version
+    token* so ``col("x")`` before and after an overwrite of ``x`` never
+    aliases (:func:`repro.core.expr.resolved_signature`). The first walk
+    counts version-resolved occurrences of every non-leaf sub-expression
+    across ``Project`` entries and ``Filter`` predicates; a sub-expression
+    occurring at least twice is elected unless it only ever appears inside
+    one strictly larger shared expression (then the larger one is elected
+    instead). The second walk hoists each elected sub-expression into a
+    synthetic ``__cse_<fp>`` Project entry at its first use and rewrites
+    every consumer — later Project entries *and* Filter predicates — to
+    read the memoized column, so a chain shared by a ``where`` and a
+    derived column evaluates once per shard. Expression evaluation is
+    row-local, so computing the intermediate at the earliest consumer and
+    row-filtering it alongside every other buffer is value-preserving.
+    A terminal ``Select`` keeps the synthetic columns out of the result
+    schema; with an empty ``final_schema`` the pass is skipped (there is
+    no terminal schema to hide them behind).
+    """
+    if not final_schema:
+        return nodes
+
+    # A user ``Select`` between two consumers would drop the synthetic
+    # column, so sharing is scoped to Select-free regions: occurrences key
+    # on (region, signature) and a hoisted definition never outlives its
+    # region.
+    occ: dict[tuple[int, bytes], int] = {}
+    parents: dict[tuple[int, bytes], set[bytes | None]] = {}
+
+    def count(e: E.Expr, versions: dict, region: int, parent: bytes | None) -> None:
+        if isinstance(e, (E.Col, E.Lit)):
+            return
+        sig = E.resolved_signature(e, versions)
+        kids = [e.input] if isinstance(e, E.StrOp) else list(e.parts)
+        for k in kids:
+            count(k, versions, region, sig)
+        if sig is not None:
+            occ[region, sig] = occ.get((region, sig), 0) + 1
+            parents.setdefault((region, sig), set()).add(parent)
+
+    versions: dict[str, bytes | None] = {}
+    region = 0
+    for node in nodes:
+        if isinstance(node, Select):
+            region += 1
+        elif isinstance(node, Project):
+            for out_col, e in node.exprs:
+                sig_e = E.resolved_signature(e, versions)
+                count(e, versions, region, None)
+                versions[out_col] = sig_e
+        elif isinstance(node, Filter):
+            for e in E.pred_exprs(node.pred):
+                count(e, versions, region, None)
+
+    selected: set[tuple[int, bytes]] = set()
+    for (reg, sig), n in occ.items():
+        if n < 2:
+            continue
+        ps = parents.get((reg, sig), set())
+        if len(ps) == 1:
+            (p,) = ps
+            if p is not None and occ.get((reg, p), 0) >= 2:
+                continue  # covered by a strictly larger shared expression
+        selected.add((reg, sig))
+    if not selected:
+        return nodes
+
+    defined: dict[tuple[int, bytes], str] = {}
+    region = 0
+
+    def rewrite(
+        e: E.Expr, versions: dict, defs: list[tuple[str, E.Expr]]
+    ) -> E.Expr:
+        """Replace elected subtrees (signatures from the *original* tree)
+        with references to their synthetic column, defining it at first
+        use."""
+        if isinstance(e, (E.Col, E.Lit)):
+            return e
+        sig = E.resolved_signature(e, versions)
+        if isinstance(e, E.StrOp):
+            new_in = rewrite(e.input, versions, defs)
+            new_e: E.Expr = (
+                e if new_in is e.input else E.StrOp(new_in, e.op, e.label)
+            )
+        else:  # Concat
+            new_parts = tuple(rewrite(p, versions, defs) for p in e.parts)
+            new_e = (
+                e
+                if all(a is b for a, b in zip(new_parts, e.parts))
+                else E.Concat(new_parts, e.sep)
+            )
+        if sig is not None and (region, sig) in selected:
+            name = defined.get((region, sig))
+            if name is None:
+                name = _cse_name(sig)
+                defined[region, sig] = name
+                defs.append((name, new_e))
+            return E.Col(name)
+        return new_e
+
+    versions = {}
+    out_nodes: list[PlanNode] = []
+    for node in nodes:
+        if isinstance(node, Select):
+            region += 1
+            out_nodes.append(node)
+        elif isinstance(node, Project):
+            entries: list[tuple[str, E.Expr]] = []
+            for out_col, e in node.exprs:
+                sig_e = E.resolved_signature(e, versions)
+                defs: list[tuple[str, E.Expr]] = []
+                new_e = rewrite(e, versions, defs)
+                entries.extend(defs)
+                entries.append((out_col, new_e))
+                versions[out_col] = sig_e
+            out_nodes.append(Project(tuple(entries)))
+        elif isinstance(node, Filter):
+            defs = []
+            new_pred = E.map_pred_exprs(
+                node.pred, lambda ex: rewrite(ex, versions, defs)
+            )
+            if defs:
+                out_nodes.append(Project(tuple(defs)))
+            out_nodes.append(Filter(new_pred))
+        else:
+            out_nodes.append(node)
+    if not defined:
+        return nodes
+    return out_nodes + [Select(tuple(final_schema))]
+
+
 def optimize_plan(
     nodes: Sequence[PlanNode], final_schema: Sequence[str] = ()
 ) -> list[PlanNode]:
@@ -358,7 +533,8 @@ def optimize_plan(
     out = _merge_adjacent(list(nodes))
     out = _pull_filters_back(out)
     out = _prune_and_project(out, final_schema)
-    return out
+    out = _cse_pass(out, final_schema)
+    return _merge_adjacent(out)
 
 
 def _node_signature(node: PlanNode) -> bytes:
@@ -457,7 +633,9 @@ def run_project_frame(
     out = frame
     try:
         for out_col, comp in compiled:
-            if pool is not None and comp[0] == "chain":
+            if comp[0] == "chain" and not comp[2]:
+                buf = lookup(comp[1])  # pure alias (CSE consumer): no copy
+            elif pool is not None and comp[0] == "chain":
                 src = lookup(comp[1])
                 chunks = _split_on_rows(src, workers)
                 parts = list(pool.map(_run_ops, [(list(comp[2]), c) for c in chunks]))

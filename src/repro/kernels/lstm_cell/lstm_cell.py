@@ -12,12 +12,10 @@ asserts this). Gate math in fp32 on the VPU, matmuls on the MXU.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ..pallas_compat import tpu_compiler_params
 

@@ -5,7 +5,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from .lstm_cell import lstm_cell
 

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def rg_lru_ref(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:

@@ -217,7 +217,6 @@ def build_cell(arch: str, shape_name: str, mesh, *, param_dtype=jnp.bfloat16,
 
     if shp.kind == "train":
         micro_rows = plan.get("micro_rows", MICRO_ROWS.get(arch, 4))
-        local_rows = shp.global_batch  # rows stay global in pjit-land
         dp = int(np.prod([mesh.shape[a] for a in data_axis_names(mesh)]))
         n_micro = max(1, shp.global_batch // (micro_rows * dp))
         opt = AdamW(learning_rate=1e-4)

@@ -116,7 +116,6 @@ def parse_module(text: str) -> tuple[dict[str, Computation], str]:
         # operand segment: up to matching close paren (approx: first ')')
         operand_seg = rest.split(")", 1)[0]
         operands = NAME_RE.findall(operand_seg)
-        attrs = rest.split(")", 1)[1] if ")" in rest else ""
         calls = CALL_ATTR_RE.findall(clean)
         calls += [c.strip() for c in
                   (BRANCH_RE.search(clean).group(1).split(",") if BRANCH_RE.search(clean) else [])]

@@ -8,7 +8,7 @@ via ``use_flash``.
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -172,7 +172,7 @@ def chunked_sdpa(
         q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
 
         def kv_body(state, kv_inp):
-            m, l, acc = state
+            m, l_sum, acc = state
             kj, k_blk, v_blk = kv_inp
             k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
             s = jnp.einsum("bqngk,btnk->bngqt", q_blk, k_blk).astype(jnp.float32) * scale
@@ -186,18 +186,18 @@ def chunked_sdpa(
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(-1)
+            l_sum_new = l_sum * corr + p.sum(-1)
             pv = jnp.einsum("bngqt,btnk->bngqk", p.astype(v_blk.dtype), v_blk)
             acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
-            return (m_new, l_new, acc_new), None
+            return (m_new, l_sum_new, acc_new), None
 
         m0 = jnp.full((b, nkv, g, q_chunk), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((b, nkv, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, nkv, g, q_chunk, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, l_sum, acc), _ = jax.lax.scan(
             kv_body, (m0, l0, a0), (jnp.arange(nkv_chunks), kc, vc)
         )
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(l_sum, 1e-30)[..., None]
         out = jnp.moveaxis(out, 3, 1)  # (b, qc, nkv, g, hd)
         return carry, out.astype(q_blk.dtype)
 

@@ -14,7 +14,6 @@ MLP), ``mlstm``/``slstm`` (xLSTM, self-contained). Frontends: ``audio``
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -377,7 +376,6 @@ class LM:
         """One decode step. tokens: (b, 1) (or (b, n) block); pos: scalar
         current cache length. Returns (logits for last position, new state)."""
         cfg, mctx = self.cfg, self.mctx
-        batch = {"tokens": tokens}
         x = embed_tokens(params["embed"], tokens, cfg)
         if tokens.shape[1] > 1:  # block prefill: same anchoring as forward
             x = mctx.constrain_batch(x)

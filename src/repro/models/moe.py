@@ -21,7 +21,6 @@ combine result carries data-parallel sharding only.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,9 @@ class AdamW:
     moment_dtype: Any = jnp.float32
 
     def init(self, params: Any) -> AdamWState:
-        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, self.moment_dtype)
+
         return AdamWState(
             count=jnp.zeros((), jnp.int32),
             m=jax.tree.map(zeros, params),
@@ -68,7 +70,9 @@ class AdamW:
 
 def global_norm(tree: Any) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
+    )
 
 
 def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):

@@ -61,6 +61,5 @@ def psum_compressed(grads: Any, axis_names, error: Any | None = None) -> tuple[A
     )
     new_error = jax.tree.map(lambda c, qq, s: c - qq.astype(jnp.float32) * s, corrected, q, scales)
     summed = jax.tree.map(lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_names), q)
-    n = 1
     mean = jax.tree.map(lambda ss, s: ss.astype(jnp.float32) * s, summed, scales)
     return mean, new_error

@@ -15,7 +15,7 @@ pipeline (batch axis = whatever the new mesh provides).
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

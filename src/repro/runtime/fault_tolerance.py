@@ -19,12 +19,10 @@ control plane at single-process scale with the same interfaces:
 
 from __future__ import annotations
 
-import os
 import time
 from pathlib import Path
 from typing import Any, Callable, Iterator
 
-import jax
 
 from ..checkpoint.checkpointer import Checkpointer
 

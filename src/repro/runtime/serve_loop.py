@@ -9,7 +9,7 @@ batching in its simplest correct form: fixed slots, refill on completion).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Iterator, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ Gradient accumulation serves three purposes at pod scale:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -365,7 +365,6 @@ def test_streaming_bucketed_matches_wholeframe(tmp_path):
                 fh.write(json.dumps({"title": title, "abstract": abstract}) + "\n")
 
     specs = seq2seq_specs(max_abstract_len=24, max_title_len=8)
-    records = None
 
     def chain():
         return (

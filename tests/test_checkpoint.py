@@ -1,9 +1,7 @@
 """Checkpointing + fault tolerance: atomic save/restore, kill-resume,
 elastic re-mesh."""
 
-import json
 import os
-import signal
 import subprocess
 import sys
 import time
@@ -12,7 +10,6 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.runtime.fault_tolerance import Heartbeat, TrainController

@@ -13,7 +13,7 @@ from repro.core.frame import ColumnarFrame
 from repro.core.p3sapp import case_study_stages, run_conventional, run_p3sapp
 from repro.core.pipeline import Pipeline, compile_column_plans
 from repro.core.stages import ConvertToLower, RemoveShortWords, StopWordsRemover
-from repro.data.batching import TokenSpec, seq2seq_arrays, seq2seq_specs
+from repro.data.batching import seq2seq_arrays, seq2seq_specs
 from repro.data.synthetic import write_corpus
 from repro.data.tokenizer import WordTokenizer
 
@@ -96,8 +96,15 @@ def test_adjacent_apply_and_dropna_merge():
     opt = ds.optimized_plan()
     projects = [n for n in opt if isinstance(n, P.Project)]
     assert len(projects) == 1 and len(projects[0].exprs) == 2
-    dropnas = [n for n in opt if isinstance(n, P.DropNA)]
-    assert len(dropnas) == 1 and set(dropnas[0].subset) == {"title", "abstract"}
+    # The two dropnas merge, then the merged subset splits at the Project:
+    # the ``abstract`` half (untouched by the stages) commutes below it,
+    # the ``title`` half (written by the stages) stays behind.
+    assert [n.describe() for n in opt] == [
+        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
+        "DropNA(['abstract'])",
+        projects[0].describe(),
+        "DropNA(['title'])",
+    ]
 
 
 def test_dropna_pullback_past_disjoint_apply():
@@ -321,7 +328,9 @@ def test_split_partitions_rows(corpus):
     train, val = ds.split(val_fraction=0.2, seed=1)
     tr, va = train.to_records(), val.to_records()
     assert len(tr) + len(va) == len(all_records)
-    key = lambda r: (r["title"], r["abstract"])
+    def key(r):
+        return (r["title"], r["abstract"])
+
     assert sorted(map(key, tr + va)) == sorted(map(key, all_records))
 
 

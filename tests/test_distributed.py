@@ -10,10 +10,8 @@ import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
-import pytest
 
-from repro.distributed.sharding import DEFAULT_RULES, FSDP_RULES, spec_for
+from repro.distributed.sharding import FSDP_RULES, spec_for
 
 
 def run_sub(body: str) -> None:

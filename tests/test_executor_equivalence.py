@@ -379,6 +379,124 @@ def test_expression_predicates_match_python_semantics(tmp_path):
         assert record_multiset(executor_records(ex)) == want
 
 
+def _check_ds_three_executors(d, ds):
+    """Whole-frame, thread, and process execution of an arbitrary
+    frame-level dataset plan must produce byte-identical record
+    multisets."""
+    frame_nodes, _ = P.split_plan(ds.plan)
+    frame, _ = P.execute_frame_plan(frame_nodes, final_schema=ds.schema)
+    want = record_multiset(frame.to_records())
+    program = EX.compile_shard_program(
+        P.optimize_plan(frame_nodes, ds.schema), optimize=True
+    )
+    shards = ing.list_shards([d])
+    for make in (
+        lambda: EX.ThreadShardExecutor(shards, program, workers=2),
+        lambda: EX.ProcessShardExecutor(shards, program, workers=2),
+    ):
+        assert record_multiset(executor_records(make())) == want
+    return want
+
+
+@pytest.mark.parametrize(
+    "records",
+    [
+        pytest.param(EDGE_RECORDS, id="edge-cases"),
+        pytest.param(fuzz_records(11, 50), id="fuzz-11"),
+    ],
+)
+def test_cse_plan_byte_identical_across_executors(tmp_path, records):
+    """A chain shared between a ``where`` predicate and a projected
+    derived column (hoisted by cross-node CSE into a ``__cse_*``
+    intermediate) must stay byte-identical to whole-frame on every
+    executor, and the synthetic column must not leak into the results."""
+    from repro.core.expr import clean_text, col
+
+    d = write_shards(tmp_path, records)
+    shared = clean_text(col("abstract"))
+    ds = (
+        Dataset.from_json_dirs([d], FIELDS)
+        .where(shared.word_count() >= 2)
+        .with_column("abstract", shared)
+        .with_column("short", clean_text(col("abstract")))
+    )
+    opt = ds.optimized_plan()
+    assert any(
+        out.startswith("__cse_")
+        for n in opt
+        if isinstance(n, P.Project)
+        for out, _ in n.exprs
+    ), "expected a hoisted CSE intermediate in the optimized plan"
+    want = _check_ds_three_executors(d, ds)
+    for rec in want:
+        assert not any(k.startswith("__cse_") for k, _ in rec)
+
+
+@pytest.mark.parametrize(
+    "records",
+    [
+        pytest.param(EDGE_RECORDS, id="edge-cases"),
+        pytest.param(fuzz_records(12, 50), id="fuzz-12"),
+    ],
+)
+def test_conjunct_split_byte_identical_across_executors(tmp_path, records):
+    """A mixed raw/derived ``&`` predicate (split by the optimizer so the
+    raw conjunct filters below the Project) must keep the exact row set of
+    the unsplit plan on every executor."""
+    from repro.core.expr import abstract_expr, col
+
+    d = write_shards(tmp_path, records)
+    ds = (
+        Dataset.from_json_dirs([d], FIELDS)
+        .with_column("abstract", abstract_expr())
+        .where(
+            (col("abstract").word_count() >= 1)
+            & col("title").not_empty()
+            & ~col("title").contains("x")
+        )
+    )
+    opt = ds.optimized_plan()
+    filters = [n for n in opt if isinstance(n, P.Filter)]
+    assert len(filters) == 2, "expected the conjunction to split at the Project"
+    _check_ds_three_executors(d, ds)
+
+
+@pytest.mark.parametrize(
+    "records",
+    [
+        pytest.param(EDGE_RECORDS * 3, id="edge-dups"),
+        pytest.param(fuzz_records(13, 60) * 2, id="fuzz-dups"),
+    ],
+)
+def test_two_pass_fit_vocab_matches_whole_frame(tmp_path, records):
+    """fit_vocab on a partial-subset dedup plan must run the streaming
+    two-pass canonical-survivor protocol (no whole-frame fallback) and
+    produce the byte-identical vocabulary on thread and process
+    executors."""
+
+    def pipe():
+        return (
+            Dataset.from_json_dirs([d], FIELDS)
+            .dropna(FIELDS)
+            .drop_duplicates(["title"])  # partial subset
+            .apply(*case_study_stages())
+        )
+
+    d = write_shards(tmp_path, records, n_files=4)
+    whole_ds = pipe()
+    whole_ds.collect()  # materialize → fit_vocab counts the memoized frame
+    vocab_whole = whole_ds.fit_vocab(vocab_size=64)
+
+    for executor in ("thread", "process"):
+        stats: dict = {}
+        vocab = pipe().fit_vocab(
+            vocab_size=64, workers=2, executor=executor, stats=stats
+        )
+        assert stats["executor"] == executor, stats
+        assert stats["two_pass"] is True
+        assert vocab.itos == vocab_whole.itos
+
+
 def test_dedup_plan_thread_matches_whole_frame(tmp_path):
     records = EDGE_RECORDS + EDGE_RECORDS  # every row duplicated across shards
     d = write_shards(tmp_path, records)

@@ -1,11 +1,17 @@
-"""Golden-plan regression tests.
+"""Golden-plan regression tests (file-based snapshots).
 
-The optimizer's rewrites (Project merge, filter pullback, dead-column
-pruning, source projection) are *exact* — they must never change what a
-plan computes — so their output shape is part of the API. These snapshots
-pin the optimized plan for representative chains; an optimizer refactor
-that changes any of them must update the snapshot deliberately, not
-silently.
+The optimizer's rewrites (Project merge, filter pullback, conjunct-split
+pushdown, dead-column pruning, source projection, cross-node CSE) are
+*exact* — they must never change what a plan computes — so their output
+shape is part of the API. Each case under ``tests/golden_plans/`` pins the
+full ``explain()`` rendering (logical plan + optimized plan) for a
+representative chain; an optimizer refactor that changes any of them must
+update the snapshot deliberately, not silently.
+
+On drift the failure message is a unified diff of the plan rendering (the
+CI golden-plan gate surfaces it verbatim). To accept intended changes::
+
+    REPRO_UPDATE_GOLDENS=1 python -m pytest tests/test_golden_plans.py -q
 
 The plan fingerprint (:func:`repro.core.plan.plan_fingerprint`) is pinned
 structurally (stable across rebuilds, sensitive to every parameter) rather
@@ -13,132 +19,190 @@ than by literal value, since expression fingerprints hash LUT/pattern
 contents.
 """
 
+import difflib
+import os
+from pathlib import Path
+
+import pytest
+
 from repro.core import plan as P
 from repro.core.dataset import Dataset
-from repro.core.expr import abstract_expr, col, concat, title_expr
+from repro.core.expr import (
+    abstract_expr,
+    clean_text,
+    col,
+    concat,
+    title_expr,
+)
 from repro.core.p3sapp import case_study_stages
 from repro.core.stages import ConvertToLower, RemoveShortWords
 from repro.data.batching import TokenSpec
 from repro.data.tokenizer import WordTokenizer
 
-CLEAN_CHAIN = (
-    ".strip_html().strip_parens().expand_contractions()"
-    ".keep_letters().collapse_spaces()"
-)
+GOLDEN_DIR = Path(__file__).parent / "golden_plans"
 
 
-def optimized_lines(ds: Dataset) -> list[str]:
-    return [n.describe() for n in ds.optimized_plan()]
-
-
-def test_golden_project_and_filter_merge():
-    ds = (
+def _case_project_and_filter_merge() -> Dataset:
+    return (
         Dataset.from_json_dirs(["/x"])
         .apply(ConvertToLower("title"))
         .apply(RemoveShortWords("title", threshold=2))
         .dropna(["title"])
         .dropna(["abstract"])
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "Project(title=col('title').lower(), title=col('title').min_word_len(3))",
-        "DropNA(['title', 'abstract'])",
-    ]
 
 
-def test_golden_dropna_pullback():
-    ds = (
+def _case_dropna_pullback() -> Dataset:
+    return (
         Dataset.from_json_dirs(["/x"])
         .apply(ConvertToLower("abstract"))
         .dropna(["title"])
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "DropNA(['title'])",
-        "Project(abstract=col('abstract').lower())",
-    ]
 
 
-def test_golden_source_projection():
+def _case_source_projection() -> Dataset:
     tok = WordTokenizer(["w"])
-    ds = (
+    return (
         Dataset.from_json_dirs(["/x"], ("title", "abstract", "venue"))
         .dropna(["abstract"])
         .apply(ConvertToLower("abstract"))
         .tokenize(tok, (TokenSpec("abstract", 16),))
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['abstract'])",
-        "DropNA(['abstract'])",
-        "Project(abstract=col('abstract').lower())",
-        "Tokenize(abstract->abstract_tokens[max_len=16])",
-    ]
 
 
-def test_golden_canonical_p3sapp_chain():
-    ds = (
+def _case_canonical_p3sapp_chain() -> Dataset:
+    return (
         Dataset.from_json_dirs(["/x"])
         .dropna()
         .drop_duplicates()
         .apply(*case_study_stages())
         .dropna()
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "DropNA(['title', 'abstract'])",
-        "DropDuplicates(['title', 'abstract'])",
-        "Project(abstract=col('abstract').lower(), "
-        "abstract=col('abstract').strip_html(), "
-        "abstract=col('abstract').strip_parens().expand_contractions()"
-        ".keep_letters().collapse_spaces(), "
-        "abstract=col('abstract').remove_stopwords(127 words), "
-        "abstract=col('abstract').min_word_len(2), "
-        "title=col('title').lower(), title=col('title').strip_html(), "
-        "title=col('title').strip_parens().expand_contractions()"
-        ".keep_letters().collapse_spaces(), "
-        "title=col('title').min_word_len(2))",
-        "DropNA(['title', 'abstract'])",
-    ]
 
 
-def test_golden_expression_plan_filter_pushed_below_project():
-    """Acceptance snapshot: a ``where`` on a *raw* column declared after a
-    ``Project`` is pushed back below it, so the predicate runs on source
-    byte buffers before any cleaning touches the dropped rows; the unused
-    derived column is pruned; the merged predicate renders as a tree."""
+def _case_filter_pushed_below_project() -> Dataset:
+    """A ``where`` on a *raw* column declared after a ``Project`` is pushed
+    back below it, so the predicate runs on source byte buffers before any
+    cleaning touches the dropped rows; the unused derived column is pruned;
+    the merged predicate renders as a tree."""
     tok = WordTokenizer(["w"])
-    ds = (
+    return (
         Dataset.from_json_dirs(["/x"])
         .with_column("abstract", abstract_expr())
         .with_column("title_clean", title_expr())  # dead: nothing reads it
         .where(col("title").not_empty() & col("title").contains("a"))
         .tokenize(tok, (TokenSpec("abstract", 16),))
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "Filter((col('title').not_empty() & col('title').contains('a')))",
-        "Project(abstract=col('abstract').lower()"
-        + CLEAN_CHAIN
-        + ".remove_stopwords(127 words).min_word_len(2))",
-        "Tokenize(abstract->abstract_tokens[max_len=16])",
-    ]
 
 
-def test_golden_filter_on_derived_column_stays_put():
+def _case_filter_on_derived_column_stays_put() -> Dataset:
     """The dual snapshot: a predicate reading a column the Project writes
     must NOT move — pushing it down would filter on pre-cleaning bytes."""
-    ds = (
+    return (
         Dataset.from_json_dirs(["/x"])
         .with_column("abstract", abstract_expr())
         .where(col("abstract").word_count() >= 4)
     )
-    assert optimized_lines(ds) == [
-        "SourceJsonDirs(dirs=1, fields=['title', 'abstract'])",
-        "Project(abstract=col('abstract').lower()"
-        + CLEAN_CHAIN
-        + ".remove_stopwords(127 words).min_word_len(2))",
-        "Filter((col('abstract').word_count() >= 4))",
-    ]
+
+
+def _case_conjunct_split_mixed_filter() -> Dataset:
+    """Conjunct-split pushdown: the raw-column conjunct of an ``&``
+    predicate commutes below the Project (rows it rejects are never
+    cleaned) while the derived-column conjunct stays behind it."""
+    return (
+        Dataset.from_json_dirs(["/x"])
+        .with_column("abstract", abstract_expr())
+        .where(
+            (col("abstract").word_count() >= 4) & col("title").not_empty()
+        )
+    )
+
+
+def _case_dropna_split_at_project() -> Dataset:
+    """The DropNA analogue of conjunct splitting: the subset half the
+    Project does not write commutes below it, the written half stays."""
+    return (
+        Dataset.from_json_dirs(["/x"])
+        .apply(ConvertToLower("title"))
+        .dropna(["title", "abstract"])
+    )
+
+
+def _case_cse_filter_project_shared_chain() -> Dataset:
+    """Cross-node CSE: the cleaning chain shared by the ``where`` predicate
+    and the projected column is hoisted into one ``__cse_*`` entry; both
+    consumers read the memoized intermediate and a terminal Select keeps
+    it out of the result schema."""
+    return (
+        Dataset.from_json_dirs(["/x"])
+        .where(clean_text(col("abstract")).word_count() >= 5)
+        .with_column("abstract", clean_text(col("abstract")))
+    )
+
+
+def _case_cse_shared_prefix_transform() -> Dataset:
+    """CSE inside one ``transform``: two derived columns sharing a chain
+    prefix compute it once."""
+    return (
+        Dataset.from_json_dirs(["/x"])
+        .transform(
+            abstract=clean_text(col("abstract")).remove_stopwords(),
+            abstract_long=clean_text(col("abstract")).min_word_len(5),
+        )
+    )
+
+
+def _case_cse_concat_shared() -> Dataset:
+    """CSE of a shared ``concat`` root between a derived column and a
+    later filter."""
+    both = concat(col("title"), col("abstract")).lower().collapse_spaces()
+    return (
+        Dataset.from_json_dirs(["/x"])
+        .with_column("both", both)
+        .where(both.word_count() >= 3)
+    )
+
+
+CASES = {
+    "project_and_filter_merge": _case_project_and_filter_merge,
+    "dropna_pullback": _case_dropna_pullback,
+    "source_projection": _case_source_projection,
+    "canonical_p3sapp_chain": _case_canonical_p3sapp_chain,
+    "filter_pushed_below_project": _case_filter_pushed_below_project,
+    "filter_on_derived_column_stays_put": _case_filter_on_derived_column_stays_put,
+    "conjunct_split_mixed_filter": _case_conjunct_split_mixed_filter,
+    "dropna_split_at_project": _case_dropna_split_at_project,
+    "cse_filter_project_shared_chain": _case_cse_filter_project_shared_chain,
+    "cse_shared_prefix_transform": _case_cse_shared_prefix_transform,
+    "cse_concat_shared": _case_cse_concat_shared,
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_plan(name):
+    got = CASES[name]().explain() + "\n"
+    path = GOLDEN_DIR / f"{name}.txt"
+    if os.environ.get("REPRO_UPDATE_GOLDENS"):
+        GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+        path.write_text(got)
+        return
+    want = path.read_text() if path.exists() else ""
+    if got != want:
+        diff = "\n".join(
+            difflib.unified_diff(
+                want.splitlines(),
+                got.splitlines(),
+                fromfile=f"tests/golden_plans/{name}.txt (committed)",
+                tofile="explain() (current optimizer)",
+                lineterm="",
+            )
+        )
+        pytest.fail(
+            f"golden plan drift for {name!r}:\n{diff}\n\n"
+            "If the optimizer change is intended, regenerate with\n"
+            "  REPRO_UPDATE_GOLDENS=1 python -m pytest tests/test_golden_plans.py -q",
+            pytrace=False,
+        )
 
 
 def test_golden_batch_options_rendered():
@@ -185,3 +249,13 @@ def test_expression_fingerprints_stable_and_parameter_sensitive():
     assert a == P.plan_fingerprint(build().plan, build().schema)
     assert a != P.plan_fingerprint(build(n=4).plan, build().schema)
     assert a != P.plan_fingerprint(build(needle="y").plan, build().schema)
+
+
+def test_cse_plan_fingerprint_stable():
+    """Synthetic ``__cse_*`` names derive from structural signatures, so
+    independently rebuilt CSE plans fingerprint identically."""
+    a = _case_cse_filter_project_shared_chain()
+    b = _case_cse_filter_project_shared_chain()
+    assert [n.describe() for n in a.optimized_plan()] == [
+        n.describe() for n in b.optimized_plan()
+    ]

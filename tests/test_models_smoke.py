@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, all_cells, get, get_smoke, supported_shapes
+from repro.configs import ARCH_IDS, all_cells, get, get_smoke
 from repro.models.lm import LM
 
 KEY = jax.random.PRNGKey(0)

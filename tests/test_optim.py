@@ -9,7 +9,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.optim.adamw import AdamW, global_norm, warmup_cosine
+from repro.optim.adamw import AdamW, warmup_cosine
 from repro.optim.grad_compression import (
     compress_tree,
     decompress_tree,

@@ -1,0 +1,272 @@
+"""Unit tests for optimizer round two: cross-node CSE, conjunct-split
+pushdown, and the two-pass dedup program split.
+
+The differential harness (:mod:`tests.test_executor_equivalence`) proves
+the rewrites are byte-exact; these tests prove they actually *eliminate*
+work — an evaluation-count probe wraps ``bytesops.apply_ops`` and asserts
+the shared chain runs once per frame/shard — and pin the unit-level
+contracts (conjunct flattening, survivor-program compilation, dedup_take
+guard rails).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import bytesops as B
+from repro.core import executor as EX
+from repro.core import ingest as ing
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.expr import and_all, clean_text, col, split_conjuncts
+
+FIELDS = ("title", "abstract")
+
+RECORDS = [
+    {"title": f"title {i}", "abstract": f"some abstract <b>text</b> number {i}"}
+    for i in range(12)
+]
+
+
+def write_shards(root, records, n_files=3):
+    d = root / "corpus"
+    d.mkdir(parents=True, exist_ok=True)
+    for i in range(n_files):
+        with open(d / f"s{i}.jsonl", "w", encoding="utf-8") as fh:
+            for r in records[i::n_files]:
+                fh.write(json.dumps(r, ensure_ascii=False) + "\n")
+    return d
+
+
+@pytest.fixture
+def op_chain_counter(monkeypatch):
+    """Count non-trivial ``apply_ops`` invocations (the unit CSE saves)."""
+    calls = []
+    real = B.apply_ops
+
+    def counting(buf, ops):
+        if ops:
+            calls.append(len(ops))
+        return real(buf, ops)
+
+    monkeypatch.setattr(B, "apply_ops", counting)
+    return calls
+
+
+def shared_chain_ds(d):
+    """The ROADMAP case: one cleaning chain consumed by both a ``where``
+    predicate and a projected derived column."""
+    shared = clean_text(col("abstract"))
+    return (
+        Dataset.from_json_dirs([d], FIELDS)
+        .where(shared.word_count() >= 2)
+        .with_column("abstract", shared)
+    )
+
+
+def test_cse_whole_frame_evaluates_shared_chain_once(tmp_path, op_chain_counter):
+    d = write_shards(tmp_path, RECORDS)
+    # workers=1 keeps evaluation in-process so the probe sees every call.
+    frame = shared_chain_ds(d).collect(workers=1)
+    # One apply_ops for the hoisted chain; the filter reads the memoized
+    # buffer and the projected column is a zero-op alias.
+    assert len(op_chain_counter) == 1, op_chain_counter
+    assert frame.field_names == ["title", "abstract"]  # no __cse_* leak
+
+
+def test_without_cse_shared_chain_evaluates_twice(tmp_path, op_chain_counter):
+    d = write_shards(tmp_path, RECORDS)
+    shared_chain_ds(d).collect(optimize=False, workers=1)
+    # The paper-faithful executor runs the chain once per consumer: once
+    # for the predicate, once for the projected column.
+    assert len(op_chain_counter) == 2, op_chain_counter
+
+
+def test_cse_thread_executor_evaluates_shared_chain_once_per_shard(
+    tmp_path, op_chain_counter
+):
+    d = write_shards(tmp_path, RECORDS, n_files=3)
+    ds = shared_chain_ds(d)
+    frame_nodes, _ = P.split_plan(ds.plan)
+    program = EX.compile_shard_program(
+        P.optimize_plan(frame_nodes, ds.schema), optimize=True
+    )
+    ex = EX.ThreadShardExecutor(ing.list_shards([d]), program, workers=1)
+    rows = sum(len(res.frame) for res in ex)
+    ex.stop()
+    assert rows > 0
+    assert len(op_chain_counter) == 3, op_chain_counter  # one per shard
+
+
+def test_cse_skips_unfingerprintable_ops(tmp_path):
+    """A lambda word predicate has no stable signature; CSE must not alias
+    the full chain on an unsound key — only its fingerprintable prefix is
+    hoisted, and each consumer keeps its own lambda op."""
+    e = col("abstract").lower().remove_words(lambda w, h: False)
+    ds = Dataset.from_json_dirs(["/x"], FIELDS).with_column("a", e).with_column("b", e)
+    opt = ds.optimized_plan()
+    entries = [
+        (out, expr.describe())
+        for n in opt
+        if isinstance(n, P.Project)
+        for out, expr in n.exprs
+    ]
+    # The `.lower()` prefix is shared once; the unfingerprintable tail is
+    # re-evaluated per consumer (never collapsed into one alias).
+    assert sum(1 for out, _ in entries if out.startswith("__cse_")) == 1
+    lambda_entries = [d for out, d in entries if "remove_words" in d]
+    assert len(lambda_entries) == 2
+    assert all(d.count("remove_words") == 1 for d in lambda_entries)
+
+
+def test_cse_distinguishes_column_versions():
+    """``col('x')`` before and after an overwrite of ``x`` must never
+    alias: the second entry reads the *new* version."""
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .with_column("abstract", col("abstract").lower())
+        .with_column("abstract2", col("abstract").lower())
+    )
+    opt = ds.optimized_plan()
+    # Same structural expression, different input versions → no CSE.
+    assert not any(
+        out.startswith("__cse_")
+        for n in opt
+        if isinstance(n, P.Project)
+        for out, _ in n.exprs
+    )
+
+
+def test_cse_does_not_reuse_across_user_select(tmp_path):
+    """A user ``select()`` between two consumers drops any synthetic
+    column, so CSE must scope sharing to Select-free regions — the plan
+    must still execute (no dangling ``__cse_*`` reference)."""
+    d = write_shards(tmp_path, RECORDS)
+    ds = (
+        Dataset.from_json_dirs([d], FIELDS)
+        .where(col("abstract").lower().not_empty())
+        .select(["abstract"])
+        .with_column("a2", col("abstract").lower())
+    )
+    frame = ds.collect(workers=1)
+    assert sorted(frame.field_names) == ["a2", "abstract"]
+    assert len(frame) > 0
+
+
+def test_optimize_plan_idempotent_on_cse_output():
+    shared = clean_text(col("abstract"))
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .where(shared.word_count() >= 2)
+        .with_column("abstract", shared)
+    )
+    once = ds.optimized_plan()
+    twice = P.optimize_plan(once, ds._needed_columns())
+    assert [n.describe() for n in once] == [n.describe() for n in twice]
+
+
+# ---------------------------------------------------------------------------
+# conjunct splitting
+# ---------------------------------------------------------------------------
+
+
+def test_split_conjuncts_roundtrip():
+    p = (col("a").word_count() >= 1) & col("b").not_empty() & ~col("c").contains("x")
+    conjs = split_conjuncts(p)
+    assert [c.describe() for c in conjs] == [
+        "(col('a').word_count() >= 1)",
+        "col('b').not_empty()",
+        "~col('c').contains('x')",
+    ]
+    assert and_all(conjs).describe() == p.describe()
+    single = col("a").not_empty()
+    assert split_conjuncts(single) == [single]
+    # `|` is not a conjunction: must stay whole
+    assert len(split_conjuncts(col("a").not_empty() | col("b").not_empty())) == 1
+
+
+def test_or_predicate_does_not_split():
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .with_column("abstract", col("abstract").lower())
+        .where((col("abstract").word_count() >= 2) | col("title").not_empty())
+    )
+    opt = ds.optimized_plan()
+    filters = [n for n in opt if isinstance(n, P.Filter)]
+    assert len(filters) == 1  # disjunction is not separable: stays put
+    assert opt.index(filters[0]) > [
+        i for i, n in enumerate(opt) if isinstance(n, P.Project)
+    ][0]
+
+
+# ---------------------------------------------------------------------------
+# two-pass dedup programs
+# ---------------------------------------------------------------------------
+
+
+def two_pass_nodes(d="/x"):
+    ds = (
+        Dataset.from_json_dirs([d], FIELDS)
+        .dropna(FIELDS)
+        .drop_duplicates(["title"])
+        .with_column("abstract", clean_text(col("abstract")))
+    )
+    frame_nodes, _ = P.split_plan(ds.plan)
+    return P.optimize_plan(frame_nodes, ds.schema), ds
+
+
+def test_split_dedup_programs_shapes():
+    nodes, ds = two_pass_nodes()
+    p1, p2 = EX.split_dedup_programs(nodes, optimize=True, count_columns=ds.schema)
+    assert p1.steps[-1] == ("dedup_emit", ("title",))
+    # pass 1 must prune transforms that do not feed the dedup key
+    assert not any(k == "project" for k, _ in p1.steps)
+    assert ("dedup_take", ("title",)) in p2.steps
+    assert not p1.has_dedup and not p2.has_dedup  # both process-capable
+    # pass 1 keys are cacheable; pass 2 output depends on the whole corpus
+    assert EX.dedup_keys_fingerprint(p1) is not None
+    assert EX.column_fingerprints(p2) is None
+
+
+def test_split_dedup_programs_rejects_multiple_dedups():
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .drop_duplicates(["title"])
+        .drop_duplicates(["abstract"])
+    )
+    frame_nodes, _ = P.split_plan(ds.plan)
+    with pytest.raises(EX.UnsupportedPlanError):
+        EX.split_dedup_programs(frame_nodes, count_columns=FIELDS)
+
+
+def test_dedup_take_requires_row_filters(tmp_path):
+    d = write_shards(tmp_path, RECORDS)
+    nodes, ds = two_pass_nodes(d)
+    _, p2 = EX.split_dedup_programs(nodes, optimize=True, count_columns=ds.schema)
+    shards = ing.list_shards([d])
+    ex = EX.ThreadShardExecutor(shards, p2, workers=1)  # no row_filters
+    with pytest.raises(EX.UnsupportedPlanError, match="survivor"):
+        list(ex)
+    ex.stop()
+
+
+def test_dedup_key_digests_distinguish_values():
+    a = EX._dedup_key_digests([["x", None, "", "x"], ["y", "y", "y", "y"]], 4)
+    assert a.shape == (4, 4) and a.dtype == np.int32
+    assert a[0].tobytes() == a[3].tobytes()  # equal value tuples agree
+    assert len({a[i].tobytes() for i in range(3)}) == 3  # None != "" != "x"
+
+
+def test_dedup_key_digests_match_python_equality_classes():
+    """Whole-frame dedup keys on Python tuple equality: True == 1 == 1.0
+    and 0.0 == -0.0 must collapse to one digest, while NaN (never equal
+    to anything) must never merge."""
+    a = EX._dedup_key_digests([[True, 1, 1.0, 0.0, -0.0, "1.0"]], 6)
+    digests = [a[i].tobytes() for i in range(6)]
+    assert digests[0] == digests[1] == digests[2]
+    assert digests[3] == digests[4]
+    assert digests[5] not in digests[:5]  # the *string* "1.0" stays apart
+    nan = float("nan")
+    b = EX._dedup_key_digests([[nan, nan]], 2)
+    assert b[0].tobytes() != b[1].tobytes()

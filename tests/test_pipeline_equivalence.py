@@ -3,10 +3,8 @@
 import numpy as np
 import pytest
 
-from repro.core import bytesops as B
 from repro.core.frame import ColumnarFrame
 from repro.core.p3sapp import (
-    case_study_stages,
     record_match_accuracy,
     run_conventional,
     run_p3sapp,

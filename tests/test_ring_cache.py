@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.models.lm import LM
@@ -21,8 +20,8 @@ def test_ring_cache_wraps_exactly():
 
     state = model.init_decode_state(b, s, cache_dtype=jnp.float32)
     # verify the cache really is ring-sized
-    kv_leaves = [l for l in jax.tree.leaves(state) if l.ndim == 5]  # stacked KV
-    assert all(l.shape[2] == cfg.window for l in kv_leaves)
+    kv_leaves = [x for x in jax.tree.leaves(state) if x.ndim == 5]  # stacked KV
+    assert all(x.shape[2] == cfg.window for x in kv_leaves)
 
     step = jax.jit(model.decode_step)
     for t in range(s):

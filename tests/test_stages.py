@@ -1,6 +1,5 @@
 """Unit + property tests: every vectorized stage == its row-wise oracle."""
 
-import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -16,7 +15,6 @@ from repro.core.stages import (
     StopWordsRemover,
     Tokenizer,
     abstract_stages,
-    title_stages,
 )
 
 ALL_STAGES = [

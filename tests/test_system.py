@@ -3,16 +3,15 @@ pipeline → tokenizer → case-study model training → inference, plus the
 async loader and serving runtime."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.p3sapp_summarizer import SMOKE as S2S
 from repro.core.async_loader import AsyncLoader, ShardPool
 from repro.core.p3sapp import run_p3sapp
-from repro.data.batching import batches, seq2seq_arrays, train_val_split
+from repro.data.batching import batches, seq2seq_arrays
 from repro.data.synthetic import write_corpus
-from repro.data.tokenizer import END, PAD, START, WordTokenizer
+from repro.data.tokenizer import WordTokenizer
 from repro.models.seq2seq import Seq2Seq
 from repro.optim.adamw import AdamW
 
@@ -104,7 +103,6 @@ def test_shard_pool_work_stealing(corpus):
     from repro.core.ingest import list_shards
 
     shards = list_shards([corpus])
-    seen = []
 
     def process(path):
         return path.name
