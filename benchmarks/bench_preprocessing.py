@@ -235,7 +235,13 @@ if __name__ == "__main__":
                     help="shard-executor scaling axis with N workers")
     ap.add_argument("--cache", action="store_true",
                     help="enable the plan-fingerprint shard cache")
-    ap.add_argument("--executor", choices=["thread", "process"], default=None)
+    ap.add_argument(
+        "--executor",
+        choices=["thread", "process", "remote"],
+        default=None,
+        help="physical shard executor; 'remote' runs the distributed data "
+        "plane with N localhost worker processes",
+    )
     ap.add_argument("--tokenize", action="store_true",
                     help="token-space axis: fit_vocab + streaming "
                          "tokenization, fixed vs bucketed assembly")

@@ -21,12 +21,14 @@ import threading
 from pathlib import Path
 from typing import Any, Callable, Iterator, Sequence
 
-import jax
+# jax is imported lazily (first device_put): remote preprocessing workers
+# (repro.distributed.worker) import this module for ShardPool/queue helpers
+# and must not pay jax startup — they never touch a device.
 
 _SENTINEL = object()
 
 
-def _put_cancellable(q: "queue.Queue", item, cancelled: threading.Event) -> None:
+def put_cancellable(q: "queue.Queue", item, cancelled: threading.Event) -> None:
     """Bounded put that gives up once the consumer cancelled the feed."""
     while not cancelled.is_set():
         try:
@@ -36,12 +38,18 @@ def _put_cancellable(q: "queue.Queue", item, cancelled: threading.Event) -> None
             continue
 
 
-def _drain(q: "queue.Queue") -> None:
+def drain(q: "queue.Queue") -> None:
     while True:
         try:
             q.get_nowait()
         except queue.Empty:
             break
+
+
+# The coordinator/worker feed paths (repro.distributed) share these; the
+# old underscore names remain for in-repo callers.
+_put_cancellable = put_cancellable
+_drain = drain
 
 
 class ShardPool:
@@ -172,6 +180,8 @@ class AsyncLoader:
             raise self._err[0]
 
     def _put(self, batch):
+        import jax
+
         if self._sharding is not None:
             return jax.tree.map(lambda x: jax.device_put(x, self._sharding), batch)
         return jax.tree.map(jax.device_put, batch)

@@ -316,6 +316,7 @@ class Dataset:
                 workers=n_workers,
                 cache_dir=self._resolve_cache_dir(),
                 executor=executor or self._options.get("executor"),
+                remote=self._options.get("remote"),
             )
             shards = ing.list_shards(frame_nodes[0].directories)
             row_filters = None
@@ -510,13 +511,28 @@ class Dataset:
             options={**self._options, **options},
         )
 
-    def workers(self, n: int, *, executor: str | None = None) -> "Dataset":
+    def workers(
+        self,
+        n: int,
+        *,
+        executor: str | None = None,
+        remote: Any = None,
+    ) -> "Dataset":
         """Default worker count for every terminal of this chain (and, for
         streaming terminals, which physical executor runs the shards:
-        ``"thread"``/``"process"``; default picks processes when ``n > 1``)."""
+        ``"thread"``/``"process"``/``"remote"``; default picks processes
+        when ``n > 1``). Passing ``remote=...`` (True or an options dict —
+        see :class:`repro.distributed.coordinator.RemoteShardExecutor`)
+        selects the distributed data plane: a coordinator leasing shards to
+        ``n`` TCP worker processes with heartbeat liveness and restart-safe
+        reassignment."""
         if n < 1:
             raise ValueError(f"workers must be >= 1, got {n}")
         opts: dict[str, Any] = {"workers": int(n)}
+        if remote is not None:
+            opts["remote"] = remote
+            if executor is None:
+                executor = "remote"
         if executor is not None:
             opts["executor"] = executor
         return self._with_options(**opts)
@@ -740,6 +756,7 @@ class Dataset:
                 executor=executor or self._options.get("executor"),
                 cache_dir=self._resolve_cache_dir(),
                 stats=stats,
+                remote=self._options.get("remote"),
             )
             return
         arrays = self.arrays(workers=workers, optimize=optimize)

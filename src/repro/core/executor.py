@@ -43,6 +43,7 @@ and the cache root honors ``REPRO_CACHE_DIR``.
 
 from __future__ import annotations
 
+import atexit
 import hashlib
 import json
 import multiprocessing as mp
@@ -1249,7 +1250,155 @@ def _unpack_tokens(payload: memoryview, metas: list[dict]) -> dict[str, np.ndarr
     return out
 
 
-def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
+def program_fingerprint(program: ShardProgram) -> str:
+    """Content fingerprint of a compiled shard program. The remote data
+    plane keys result dedup on ``(shard_index, program_fingerprint)``: a
+    shard re-leased after a worker death is byte-identical work, so the
+    first result under the pair wins and any late duplicate is dropped."""
+    import pickle
+
+    return hashlib.blake2b(
+        pickle.dumps(program, protocol=4), digest_size=16
+    ).hexdigest()
+
+
+class ProgramContext:
+    """Per-process execution state for one compiled program: the shard
+    cache handle plus every derived fingerprint, computed once per worker
+    instead of once per shard. Both the multiprocessing worker
+    (:func:`_worker_main`) and the remote TCP worker
+    (:mod:`repro.distributed.worker`) drive shards through :meth:`run`."""
+
+    def __init__(self, program: ShardProgram, cache_dir: str | Path | None):
+        self.program = program
+        self.cache = ShardCache(cache_dir) if cache_dir is not None else None
+        has_cache = self.cache is not None
+        self.col_fps = step_column_fingerprints(program) if has_cache else None
+        self.token_fps = token_fingerprints(program) if has_cache else None
+        self.count_fp = count_fingerprint(program) if has_cache else None
+        self.dedup_fp = dedup_keys_fingerprint(program) if has_cache else None
+        self.token_space = (
+            program.tokens is not None
+            or bool(program.count_words)
+            or _has_step(program, "dedup_emit")
+        )
+
+    def run(
+        self,
+        data: bytes | None,
+        path: str | Path | None,
+        digest: str | None,
+        row_take: np.ndarray | None,
+    ) -> ShardResult:
+        """Execute the program on one shard: serve fully-cached products
+        without parsing when possible, else parse ``data`` (read from
+        ``path`` when ``data`` is None — the fully-cached fast path's rare
+        fallback) and run every step. Wall time not attributed to a
+        specific stage lands in ``parse_s``."""
+        t0 = time.perf_counter()
+        res = _load_cached_products(
+            self.program, self.cache, self.token_fps, self.count_fp, digest,
+            self.dedup_fp,
+        )
+        if res is None:
+            if data is None:
+                with open(path, "rb") as fh:
+                    data = fh.read()
+            frame = ing.parse_shard_bytes(data, self.program.fields)
+            res = execute_program(
+                frame,
+                self.program,
+                cache=self.cache,
+                col_fps=self.col_fps,
+                token_fps=self.token_fps,
+                count_fp=self.count_fp,
+                dedup_fp=self.dedup_fp,
+                digest=digest,
+                row_take=row_take,
+                materialize=False,
+            )
+        res.parse_s = time.perf_counter() - t0 - res.tokenize_s - (
+            res.pre_clean_s + res.clean_s + res.post_clean_s
+        )
+        return res
+
+
+def pack_shard_result(res: ShardResult, *, token_space: bool) -> tuple[dict, bytes]:
+    """Serialize one :class:`ShardResult` into the executor wire format:
+    flat column sections (:func:`_pack_columns`) followed by 8-byte-aligned
+    int32 token sections (:func:`_pack_tokens`), with a metadata dict
+    carrying section offsets, counters, and timings. The identical bytes
+    ride a shared-memory segment (:class:`ProcessShardExecutor`) or a TCP
+    frame (:mod:`repro.distributed.transport`)."""
+    if token_space:
+        # Token arrays / counts are the product; text columns stay in the
+        # worker instead of riding the transport for nothing.
+        payload, metas = b"", []
+    else:
+        out_cols = list(dict.fromkeys(list(res.frame.columns) + list(res.flat)))
+        payload, metas = _pack_columns(res.frame, res.flat, out_cols)
+    payload, tok_metas = _pack_tokens(payload, res.tokens)
+    meta = {
+        "size": len(payload),
+        "columns": metas,
+        "tokens": tok_metas,
+        "word_counts": (
+            dict(res.word_counts) if res.word_counts is not None else None
+        ),
+        "parse_s": res.parse_s,
+        "pre_clean_s": res.pre_clean_s,
+        "clean_s": res.clean_s,
+        "post_clean_s": res.post_clean_s,
+        "tokenize_s": res.tokenize_s,
+        "cache_hits": res.cache_hits,
+        "cache_misses": res.cache_misses,
+        "token_cache_hits": res.token_cache_hits,
+        "token_cache_misses": res.token_cache_misses,
+    }
+    return meta, payload
+
+
+def unpack_shard_result(meta: dict, payload: memoryview) -> ShardResult:
+    """Driver-side inverse of :func:`pack_shard_result`; ``payload`` may be
+    a shared-memory view or a received TCP frame."""
+    res = ShardResult(
+        _unpack_columns(payload, meta["columns"]),
+        parse_s=meta["parse_s"],
+        pre_clean_s=meta["pre_clean_s"],
+        clean_s=meta["clean_s"],
+        post_clean_s=meta["post_clean_s"],
+        tokenize_s=meta.get("tokenize_s", 0.0),
+        cache_hits=meta["cache_hits"],
+        cache_misses=meta["cache_misses"],
+        token_cache_hits=meta.get("token_cache_hits", 0),
+        token_cache_misses=meta.get("token_cache_misses", 0),
+    )
+    res.tokens = _unpack_tokens(payload, meta.get("tokens", []))
+    counts = meta.get("word_counts")
+    res.word_counts = Counter(counts) if counts is not None else None
+    return res
+
+
+def _out_seg_name(run_id: str, task_id: int) -> str:
+    """Deterministic name for a worker's output segment: the driver can
+    sweep orphans left by a worker that died between creating the segment
+    and delivering its name (SIGKILL, OOM) without ever learning the name
+    from the worker."""
+    return f"repro_{run_id}_{task_id}"
+
+
+def _unlink_segment(name: str) -> None:
+    from multiprocessing import shared_memory
+
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+        seg.close()
+        seg.unlink()
+    except FileNotFoundError:
+        pass
+
+
+def _worker_main(task_q, result_q, program: ShardProgram, cache_dir, run_id) -> None:
     """Worker process: pull (task_id, shm_name, meta, digest, row_take)
     tasks until sentinel. ``meta`` is the byte count of the shared-memory
     segment — or, when ``shm_name`` is None (feeder's fully-cached fast
@@ -1259,94 +1408,53 @@ def _worker_main(task_q, result_q, program: ShardProgram, cache_dir) -> None:
     ``dedup_take`` program (None otherwise)."""
     from multiprocessing import shared_memory
 
-    cache = ShardCache(cache_dir) if cache_dir is not None else None
-    col_fps = step_column_fingerprints(program) if cache is not None else None
-    token_fps = token_fingerprints(program) if cache is not None else None
-    count_fp = count_fingerprint(program) if cache is not None else None
-    dedup_fp = dedup_keys_fingerprint(program) if cache is not None else None
-    token_space = (
-        program.tokens is not None
-        or bool(program.count_words)
-        or _has_step(program, "dedup_emit")
-    )
+    ctx = ProgramContext(program, cache_dir)
     while True:
         task = task_q.get()
         if task is None:
             break
         task_id, shm_name, meta, digest, row_take = task
+        out = None
+        delivered = False
         try:
-            t0 = time.perf_counter()
-            res = _load_cached_products(
-                program, cache, token_fps, count_fp, digest, dedup_fp
-            )
-            if res is None:
-                if shm_name is None:
-                    with open(meta, "rb") as fh:
-                        data = fh.read()
-                else:
-                    seg = shared_memory.SharedMemory(name=shm_name)
-                    try:
-                        data = bytes(seg.buf[:meta])
-                    finally:
-                        seg.close()
-                frame = ing.parse_shard_bytes(data, program.fields)
-                res = execute_program(
-                    frame,
-                    program,
-                    cache=cache,
-                    col_fps=col_fps,
-                    token_fps=token_fps,
-                    count_fp=count_fp,
-                    dedup_fp=dedup_fp,
-                    digest=digest,
-                    row_take=row_take,
-                    materialize=False,
-                )
-            res.parse_s = time.perf_counter() - t0 - res.tokenize_s - (
-                res.pre_clean_s + res.clean_s + res.post_clean_s
-            )
-            if token_space:
-                # Token arrays / counts are the product; text columns stay
-                # in the worker instead of riding the transport for nothing.
-                payload, metas = b"", []
+            if shm_name is None:
+                data, path = None, meta
             else:
-                out_cols = list(
-                    dict.fromkeys(list(res.frame.columns) + list(res.flat))
+                path = None
+                seg = shared_memory.SharedMemory(name=shm_name)
+                try:
+                    data = bytes(seg.buf[:meta])
+                finally:
+                    seg.close()
+            res = ctx.run(data, path, digest, row_take)
+            body, payload = pack_shard_result(res, token_space=ctx.token_space)
+            name = _out_seg_name(run_id, task_id)
+            try:
+                out = shared_memory.SharedMemory(
+                    create=True, size=max(len(payload), 1), name=name
                 )
-                payload, metas = _pack_columns(res.frame, res.flat, out_cols)
-            payload, tok_metas = _pack_tokens(payload, res.tokens)
-            out = shared_memory.SharedMemory(create=True, size=max(len(payload), 1))
+            except FileExistsError:
+                # Stale block from a crashed earlier run that collided on
+                # the id: reclaim it.
+                _unlink_segment(name)
+                out = shared_memory.SharedMemory(
+                    create=True, size=max(len(payload), 1), name=name
+                )
             out.buf[: len(payload)] = payload
-            out_name = out.name
+            body["shm"] = out.name
             out.close()
-            result_q.put(
-                (
-                    "ok",
-                    task_id,
-                    {
-                        "shm": out_name,
-                        "size": len(payload),
-                        "columns": metas,
-                        "tokens": tok_metas,
-                        "word_counts": (
-                            dict(res.word_counts)
-                            if res.word_counts is not None
-                            else None
-                        ),
-                        "parse_s": res.parse_s,
-                        "pre_clean_s": res.pre_clean_s,
-                        "clean_s": res.clean_s,
-                        "post_clean_s": res.post_clean_s,
-                        "tokenize_s": res.tokenize_s,
-                        "cache_hits": res.cache_hits,
-                        "cache_misses": res.cache_misses,
-                        "token_cache_hits": res.token_cache_hits,
-                        "token_cache_misses": res.token_cache_misses,
-                    },
-                )
-            )
+            result_q.put(("ok", task_id, body))
+            delivered = True
         except BaseException:
             result_q.put(("err", task_id, traceback.format_exc()))
+        finally:
+            if out is not None and not delivered:
+                # The driver never learned this segment's name; unlink it
+                # here or the block outlives the run.
+                try:
+                    out.unlink()
+                except FileNotFoundError:
+                    pass
 
 
 class ProcessShardExecutor:
@@ -1396,6 +1504,14 @@ class ProcessShardExecutor:
         self._inflight = threading.Semaphore(max_inflight or max(2 * workers, 4))
         self._in_segs: dict[int, str] = {}
         self._seg_lock = threading.Lock()
+        # Segment-leak bookkeeping: output segments carry deterministic
+        # names derived from this run id, and every task whose output the
+        # driver already unlinked lands in _consumed — so the sweep in
+        # stop() (and the atexit last resort) can unlink exactly the
+        # blocks a killed worker orphaned.
+        self.run_id = f"{os.getpid():x}x{os.urandom(4).hex()}"
+        self._consumed: set[int] = set()
+        atexit.register(self._sweep_segments)
         # Start the resource-tracker daemon before forking: workers must
         # inherit it, or each spawns its own and cross-process unlinks are
         # reported as leaks at shutdown.
@@ -1409,7 +1525,7 @@ class ProcessShardExecutor:
         self._procs = [
             ctx.Process(
                 target=_worker_main,
-                args=(self._task_q, self._result_q, program, cache_dir),
+                args=(self._task_q, self._result_q, program, cache_dir, self.run_id),
                 daemon=True,
             )
             for _ in range(max(int(workers), 1))
@@ -1513,42 +1629,28 @@ class ProcessShardExecutor:
             self._release_input(task_id)
             self._inflight.release()
             if status == "err":
+                self._consumed.add(task_id)  # worker unlinked its own block
                 self.stop()
                 raise RuntimeError(f"shard worker failed:\n{body}")
             seg = shared_memory.SharedMemory(name=body["shm"])
             try:
                 view = seg.buf[: body["size"]]
-                frame = _unpack_columns(view, body["columns"])
-                tokens = _unpack_tokens(view, body.get("tokens", []))
+                res = unpack_shard_result(body, view)
                 del view  # release the exported buffer before closing
             finally:
                 seg.close()
                 seg.unlink()
-            self._parse_s += body["parse_s"]
-            self._pre_s += body["pre_clean_s"]
-            self._clean_s += body["clean_s"]
-            self._post_s += body["post_clean_s"]
-            self._tokenize_s += body.get("tokenize_s", 0.0)
-            self.cache_hits += body["cache_hits"]
-            self.cache_misses += body["cache_misses"]
-            self.token_cache_hits += body.get("token_cache_hits", 0)
-            self.token_cache_misses += body.get("token_cache_misses", 0)
-            res = ShardResult(
-                frame,
-                parse_s=body["parse_s"],
-                pre_clean_s=body["pre_clean_s"],
-                clean_s=body["clean_s"],
-                post_clean_s=body["post_clean_s"],
-                tokenize_s=body.get("tokenize_s", 0.0),
-                cache_hits=body["cache_hits"],
-                cache_misses=body["cache_misses"],
-                token_cache_hits=body.get("token_cache_hits", 0),
-                token_cache_misses=body.get("token_cache_misses", 0),
-            )
-            res.tokens = tokens
+                self._consumed.add(task_id)
+            self._parse_s += res.parse_s
+            self._pre_s += res.pre_clean_s
+            self._clean_s += res.clean_s
+            self._post_s += res.post_clean_s
+            self._tokenize_s += res.tokenize_s
+            self.cache_hits += res.cache_hits
+            self.cache_misses += res.cache_misses
+            self.token_cache_hits += res.token_cache_hits
+            self.token_cache_misses += res.token_cache_misses
             res.shard_index = task_id
-            counts = body.get("word_counts")
-            res.word_counts = Counter(counts) if counts is not None else None
             yield res
 
     @property
@@ -1560,21 +1662,31 @@ class ProcessShardExecutor:
         )
 
     def _drain_results(self) -> None:
-        from multiprocessing import shared_memory
-
         try:
             while True:
                 msg = self._result_q.get_nowait()
                 if msg[0] == "ok":
-                    try:
-                        seg = shared_memory.SharedMemory(name=msg[2]["shm"])
-                        seg.close()
-                        seg.unlink()
-                    except FileNotFoundError:
-                        pass
+                    _unlink_segment(msg[2]["shm"])
+                self._consumed.add(msg[1])
                 self._release_input(msg[1])
         except Exception:
             pass
+
+    def _sweep_segments(self) -> None:
+        """Unlink every shared-memory block this run may still own: feeder
+        input segments not yet released, and any deterministically-named
+        worker output segment whose result the driver never consumed (a
+        SIGKILLed worker can orphan one between creating the block and
+        delivering its name). Runs from stop() and, as a last resort, from
+        an atexit hook, so even an abandoned executor cannot leak."""
+        with self._seg_lock:
+            leftover = list(self._in_segs.values())
+            self._in_segs.clear()
+        for name in leftover:
+            _unlink_segment(name)
+        for i in range(len(self._shards)):
+            if i not in self._consumed:
+                _unlink_segment(_out_seg_name(self.run_id, i))
 
     def stop(self) -> None:
         """Abandon remaining shards; safe after breaking out early.
@@ -1601,20 +1713,11 @@ class ProcessShardExecutor:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=2.0)
-        # Results a worker managed to emit between the drains above.
+        # Results a worker managed to emit between the drains above, then
+        # every block that can still be ours (inputs + orphaned outputs).
         self._drain_results()
-        from multiprocessing import shared_memory
-
-        with self._seg_lock:
-            leftover = list(self._in_segs.values())
-            self._in_segs.clear()
-        for name in leftover:
-            try:
-                seg = shared_memory.SharedMemory(name=name)
-                seg.close()
-                seg.unlink()
-            except FileNotFoundError:
-                pass
+        self._sweep_segments()
+        atexit.unregister(self._sweep_segments)
 
 
 # ---------------------------------------------------------------------------
@@ -1630,6 +1733,7 @@ def make_executor(
     cache_dir: str | Path | None = None,
     executor: str | None = None,
     row_filters: dict[int, np.ndarray] | None = None,
+    remote: Any = None,
 ):
     """Pick the physical shard executor.
 
@@ -1638,14 +1742,44 @@ def make_executor(
     process executor fall back to threads — never error — when the program
     needs cross-shard dedup state, the platform lacks shared memory, or
     ``workers <= 1``.
+
+    ``executor="remote"`` (or ``REPRO_EXECUTOR=remote``) runs shards on
+    the distributed data plane — a coordinator leasing shards to TCP
+    worker processes (:mod:`repro.distributed.coordinator`); ``remote``
+    carries its options (see :class:`RemoteShardExecutor`). Like the
+    process executor it falls back to threads for cross-shard dedup
+    programs and unpicklable programs.
     """
     choice = executor or os.environ.get("REPRO_EXECUTOR") or ""
     choice = choice.strip().lower()
-    if choice not in ("", "thread", "process"):
-        raise ValueError(f"unknown executor {choice!r}; use 'thread' or 'process'")
+    if choice not in ("", "thread", "process", "remote"):
+        raise ValueError(
+            f"unknown executor {choice!r}; use 'thread', 'process' or 'remote'"
+        )
     explicit = bool(choice)
     if not choice:
         choice = "process" if workers > 1 else "thread"
+    if choice == "remote":
+        import pickle
+
+        try:
+            pickle.dumps(program)
+            picklable = True
+        except Exception:
+            picklable = False
+        if program.has_dedup or not picklable:
+            choice = "thread"
+        else:
+            from ..distributed.coordinator import RemoteShardExecutor
+
+            return RemoteShardExecutor(
+                shards,
+                program,
+                workers=max(int(workers), 1),
+                cache_dir=cache_dir,
+                row_filters=row_filters,
+                remote=remote,
+            )
     # More worker processes than cores only adds fork + scheduling cost;
     # clamp (the thread pool is unclamped — its readers overlap blocking
     # I/O, not CPU). When the *default* selection lands on one effective

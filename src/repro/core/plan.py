@@ -863,6 +863,7 @@ def stream_batches(
     executor: str | None = None,
     cache_dir: str | Path | None = None,
     stats: dict | None = None,
+    remote: Any = None,
 ) -> Iterator[dict[str, np.ndarray]]:
     """Per-shard streaming execution: parse → filter → clean each shard
     inside a shard executor (reader threads or worker processes, see
@@ -879,8 +880,11 @@ def stream_batches(
     survives).
 
     ``cache_dir`` enables the plan-fingerprint shard cache; ``executor``
-    forces ``"thread"``/``"process"`` (default: env ``REPRO_EXECUTOR``, then
-    processes when ``workers > 1``). When ``stats`` is a dict it receives
+    forces ``"thread"``/``"process"``/``"remote"`` (default: env
+    ``REPRO_EXECUTOR``, then processes when ``workers > 1``); ``remote``
+    carries distributed data-plane options (see
+    :class:`repro.distributed.coordinator.RemoteShardExecutor`). When
+    ``stats`` is a dict it receives
     ``executor``, ``cache_hits``, ``cache_misses`` and per-epoch ``timings``
     after each epoch completes.
     """
@@ -929,6 +933,7 @@ def stream_batches(
             workers=max(workers, 1),
             cache_dir=cache_dir,
             executor=executor,
+            remote=remote,
         )
 
         def chunks() -> Iterator[dict[str, np.ndarray]]:

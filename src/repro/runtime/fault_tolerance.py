@@ -19,6 +19,7 @@ control plane at single-process scale with the same interfaces:
 
 from __future__ import annotations
 
+import os
 import time
 from pathlib import Path
 from typing import Any, Callable, Iterator
@@ -28,27 +29,48 @@ from ..checkpoint.checkpointer import Checkpointer
 
 
 class Heartbeat:
+    """Liveness beacon file: ``<step> <unix-time>``.
+
+    Writes go to a temp file in the same directory and are atomically
+    renamed into place, so a monitor (``is_alive``) can never observe a
+    torn, partially-written beat — a reader sees either the previous beat
+    or the new one. The remote preprocessing coordinator
+    (:mod:`repro.distributed.coordinator`) monitors these files to decide
+    worker liveness alongside TCP connection state.
+    """
+
     def __init__(self, path: str | Path, interval_s: float = 5.0):
         self.path = Path(path)
         self.interval_s = interval_s
         self._last = 0.0
 
-    def beat(self, step: int) -> None:
+    def beat(self, step: int, *, force: bool = False) -> None:
         now = time.time()
-        if now - self._last >= self.interval_s:
-            self.path.write_text(f"{step} {now}")
-            self._last = now
+        if not force and now - self._last < self.interval_s:
+            return
+        tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
+        tmp.write_text(f"{step} {now}")
+        os.replace(tmp, self.path)
+        self._last = now
+
+    @staticmethod
+    def last_beat(path: str | Path) -> float | None:
+        """Unix time of the last committed beat, or None when the file is
+        missing or unreadable (never raises: a vanished/garbage file just
+        means "no beat")."""
+        try:
+            _, ts = Path(path).read_text().split()
+            return float(ts)
+        except (OSError, ValueError):
+            # OSError: file missing / unreadable. ValueError: garbage
+            # content (wrong field count or a non-float timestamp) — with
+            # atomic beats that means corruption, not a torn write.
+            return None
 
     @staticmethod
     def is_alive(path: str | Path, timeout_s: float) -> bool:
-        p = Path(path)
-        if not p.exists():
-            return False
-        try:
-            _, ts = p.read_text().split()
-            return (time.time() - float(ts)) < timeout_s
-        except Exception:
-            return False
+        ts = Heartbeat.last_beat(path)
+        return ts is not None and (time.time() - ts) < timeout_s
 
 
 class TrainController:

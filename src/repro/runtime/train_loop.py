@@ -37,6 +37,36 @@ def split_microbatches(batch: dict, n: int) -> dict:
     return jax.tree.map(sp, batch)
 
 
+def make_input_pipeline(
+    dataset,
+    *,
+    epochs: int | None = None,
+    prefetch: int = 2,
+    sharding: Any = None,
+    stats: dict | None = None,
+):
+    """Wire a streaming :class:`~repro.core.dataset.Dataset` into the
+    learner: batches stream out of the dataset's shard executor — reader
+    threads, local worker processes, or the distributed data plane when
+    the chain carries ``.workers(n, remote=...)`` — through an
+    :class:`~repro.core.async_loader.AsyncLoader` that device-puts ahead
+    of compute.
+
+    This is the actor/learner split at pipeline level: preprocessing
+    actors (possibly on other hosts) feed the device step loop, and a
+    dead actor costs throughput, never correctness — its leased shards
+    are reassigned and the batch stream is unchanged. Returns the loader;
+    call ``.close()`` (or let a ``finally`` do it) when training stops
+    mid-epoch so remote workers shut down instead of preprocessing into a
+    queue nobody drains. ``stats`` (a dict) receives executor and cache
+    counters after each epoch.
+    """
+    from ..core.async_loader import AsyncLoader
+
+    batches = dataset.iter_batches(epochs=epochs, stats=stats)
+    return AsyncLoader(batches, prefetch=prefetch, sharding=sharding)
+
+
 def make_train_step(
     loss_fn: Callable[[Any, dict], jax.Array],
     optimizer: AdamW,

@@ -1,0 +1,88 @@
+"""Shared-memory lifecycle regression tests for ProcessShardExecutor.
+
+The failure this guards against: a worker creates its output segment,
+then dies (SIGKILL/OOM) before the driver learns the segment's name — the
+block outlives the run in /dev/shm until reboot. The fix names output
+segments deterministically from (run id, task id), so the driver's
+``stop()`` sweep (plus an atexit last resort) can unlink orphans it was
+never told about. These tests assert zero ``repro_<run_id>_*`` residue
+after a clean run, after SIGKILLing a worker mid-run, and after
+abandoning an executor mid-iteration.
+"""
+
+import os
+import signal
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import executor as EX
+from repro.core import ingest as ing
+from test_executor_equivalence import (
+    chain,
+    fuzz_records,
+    optimized_program,
+    write_shards,
+)
+
+SHM_DIR = Path("/dev/shm")
+
+pytestmark = pytest.mark.skipif(
+    not EX.shared_memory_available() or not SHM_DIR.is_dir(),
+    reason="POSIX shared memory not available",
+)
+
+
+def run_segments(run_id: str) -> list[str]:
+    return sorted(p.name for p in SHM_DIR.glob(f"repro_{run_id}_*"))
+
+
+def make_proc_executor(tmp_path, seed=21, n=40, files=4, workers=2):
+    d = write_shards(tmp_path, fuzz_records(seed, n), n_files=files)
+    ds = chain(d)
+    program = optimized_program(ds)
+    shards = ing.list_shards([d])
+    return EX.ProcessShardExecutor(shards, program, workers=workers)
+
+
+def test_clean_run_leaves_no_segments(tmp_path):
+    ex = make_proc_executor(tmp_path)
+    list(ex)
+    ex.stop()
+    assert run_segments(ex.run_id) == []
+
+
+def test_abandoned_run_leaves_no_segments(tmp_path):
+    ex = make_proc_executor(tmp_path)
+    next(iter(ex))  # consume one shard, abandon the rest in flight
+    ex.stop()
+    assert run_segments(ex.run_id) == []
+
+
+def test_sigkilled_worker_leaves_no_segments(tmp_path):
+    """Kill a worker process mid-run: whatever segments the run created —
+    including an output block the worker allocated but never reported —
+    must be gone after stop()."""
+    ex = make_proc_executor(tmp_path, seed=22, n=60, files=6)
+    it = iter(ex)
+    next(it)  # workers are up and processing
+    for p in ex._procs:
+        os.kill(p.pid, signal.SIGKILL)
+    # The iterator surfaces the dead pool as a RuntimeError (or, if every
+    # remaining result already sat in the queue, finishes); either way the
+    # executor must sweep its blocks.
+    try:
+        for _ in it:
+            pass
+    except RuntimeError:
+        pass
+    ex.stop()
+    deadline = time.time() + 5.0
+    while run_segments(ex.run_id) and time.time() < deadline:
+        time.sleep(0.05)  # resource tracker may unlink asynchronously
+    assert run_segments(ex.run_id) == []
+
+
+def test_output_segment_names_are_deterministic():
+    assert EX._out_seg_name("abc", 7) == "repro_abc_7"
