@@ -1,21 +1,30 @@
-"""Perf-regression gate over the tokenize benchmark baseline.
+"""Perf-regression gates over the committed benchmark baselines.
 
-CI runs ``python -m benchmarks.bench_preprocessing --tokenize --quick``
-(which rewrites ``benchmarks/results/tokenize.csv``) after copying the
-committed CSV aside, then calls this script to compare the fresh
-``tokens_per_s`` of every ``(dataset_id, mode)`` row against the baseline.
-A row slower than ``baseline * (1 - max_regression)`` fails the gate; rows
-present in the baseline but missing from the fresh run fail too (a
-silently skipped leg must not read as a pass).
+Default (tokenize) mode: CI runs ``python -m benchmarks.bench_preprocessing
+--tokenize --quick`` (which rewrites ``benchmarks/results/tokenize.csv``)
+after copying the committed CSV aside, then calls this script to compare
+the fresh ``tokens_per_s`` of every ``(dataset_id, mode)`` row against the
+baseline. A row slower than ``baseline * (1 - max_regression)`` fails the
+gate; rows present in the baseline but missing from the fresh run fail too
+(a silently skipped leg must not read as a pass).
 
-Refresh the committed baseline by re-running the bench on the reference
-machine and committing the regenerated CSV. The baseline is absolute
-throughput: regenerate it when the CI runner class changes, or loosen
-``--max-regression`` if the runner fleet is heterogeneous.
+``--mode overlap``: gates the device-overlap trajectory
+(``benchmarks/results/BENCH_cumulative.json``, written by
+``bench_cumulative --overlap``). The latest fresh entry must cover every
+dataset row of the latest baseline entry, and every row's device-idle
+fraction must stay at or below ``--max-idle`` — the paper's claim (host
+preprocessing hidden behind device compute) as an absolute ceiling, which
+is machine-portable where absolute seconds are not.
+
+Refresh the committed baselines by re-running the benches on the reference
+machine and committing the regenerated files. The tokenize baseline is
+absolute throughput: regenerate it when the CI runner class changes, or
+loosen ``--max-regression`` if the runner fleet is heterogeneous.
 """
 
 import argparse
 import csv
+import json
 import sys
 from pathlib import Path
 
@@ -32,17 +41,76 @@ def load_rows(path):
         }
 
 
+def _latest_overlap_rows(path):
+    """dataset_id -> row of the newest trajectory entry in an overlap JSON."""
+    doc = json.loads(Path(path).read_text())
+    trajectory = doc.get("trajectory") or []
+    if not trajectory:
+        return {}
+    return {str(r["dataset_id"]): r for r in trajectory[-1].get("rows", [])}
+
+
+def check_overlap(args):
+    baseline = _latest_overlap_rows(args.baseline)
+    fresh = _latest_overlap_rows(args.fresh)
+    if not fresh:
+        print(f"no overlap trajectory entries in {args.fresh}")
+        return 1
+    ceiling = 100.0 * args.max_idle
+    failures = []
+    for ds in sorted(baseline):
+        if ds not in fresh:
+            failures.append(f"ds{ds}: missing from fresh run")
+    for ds in sorted(fresh):
+        row = fresh[ds]
+        idle = float(row["idle_pct"])
+        steps = int(row.get("steps", 0))
+        status = "OK" if idle <= ceiling and steps > 0 else "REGRESSION"
+        print(
+            f"ds{ds}: idle {idle:.2f}% (ceiling {ceiling:.2f}%), "
+            f"{steps} steps, {row.get('starved_steps', '?')} starved, "
+            f"{row.get('compiles', '?')} compiles {status}"
+        )
+        if steps <= 0:
+            failures.append(f"ds{ds}: zero measured steps")
+        if idle > ceiling:
+            failures.append(f"ds{ds}: idle {idle:.2f}% > ceiling {ceiling:.2f}%")
+    if failures:
+        print()
+        print(f"overlap gate failed ({len(failures)} row(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"overlap gate passed: {len(fresh)} dataset(s) within the idle ceiling")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path, required=True)
     ap.add_argument("--fresh", type=Path, required=True)
+    ap.add_argument(
+        "--mode",
+        choices=["tokenize", "overlap"],
+        default="tokenize",
+        help="tokenize: CSV throughput gate; overlap: device-idle JSON gate",
+    )
     ap.add_argument(
         "--max-regression",
         type=float,
         default=0.30,
         help="fail when fresh tokens/sec drops more than this fraction",
     )
+    ap.add_argument(
+        "--max-idle",
+        type=float,
+        default=0.05,
+        help="overlap mode: fail when device-idle fraction exceeds this",
+    )
     args = ap.parse_args(argv)
+
+    if args.mode == "overlap":
+        return check_overlap(args)
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)

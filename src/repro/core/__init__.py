@@ -8,10 +8,19 @@ Public API:
     Pipeline, stages               — Spark-ML-style transformer chain (deprecated shims)
     ColumnarFrame                  — the DataFrame analogue
     AsyncLoader / ShardPool        — accelerator-overlap input pipeline
+    DeviceFeed / OverlapProfiler   — donated double-buffered device handoff
+                                     with device-idle accounting
 """
 
-from .async_loader import AsyncLoader, ShardPool
+from .async_loader import AsyncLoader, LoaderStats, ShardPool
 from .dataset import Dataset
+from .device_pipeline import (
+    BucketGrid,
+    DeviceBatch,
+    DeviceFeed,
+    OverlapProfiler,
+    OverlapReport,
+)
 from .expr import abstract_expr, col, concat, lit, title_expr
 from .frame import ColumnarFrame
 from .p3sapp import (

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Callable, Iterator, Sequence
 
@@ -26,6 +28,37 @@ from typing import Any, Callable, Iterator, Sequence
 # and must not pay jax startup — they never touch a device.
 
 _SENTINEL = object()
+
+
+@dataclass
+class LoaderStats:
+    """Prefetch-queue health counters for one :class:`AsyncLoader`.
+
+    ``starvation`` counts consumer arrivals at an *empty* queue — each one
+    is a step where the device would have idled waiting for the host.
+    ``max_depth`` is the high-water queue occupancy (how much of the
+    prefetch budget the producer actually uses); ``wait_s`` accumulates
+    consumer blocked time as measured by the loader's (injectable) clock.
+    """
+
+    prefetch: int = 0
+    produced: int = 0
+    consumed: int = 0
+    starvation: int = 0
+    max_depth: int = 0
+    wait_s: float = 0.0
+    depth: int = 0  # gauge: queue occupancy at the last consumer get
+
+    def as_dict(self) -> dict:
+        return dict(
+            prefetch=self.prefetch,
+            produced=self.produced,
+            consumed=self.consumed,
+            starvation=self.starvation,
+            max_depth=self.max_depth,
+            wait_s=self.wait_s,
+            depth=self.depth,
+        )
 
 
 def put_cancellable(q: "queue.Queue", item, cancelled: threading.Event) -> None:
@@ -126,12 +159,29 @@ class AsyncLoader:
 
     ``batches`` is any iterator of pytrees of numpy arrays. The background
     thread keeps up to ``prefetch`` ready batches; consumption device-puts
-    the next batch while the previous one is still computing.
+    the next batch while the previous one is still computing — batch k is
+    yielded only after batch k+1's transfer has been issued.
+
+    ``device_put`` replaces the per-leaf ``jax.device_put`` (tests stub it;
+    :class:`~repro.core.device_pipeline.DeviceFeed` passes a host no-op and
+    owns the transfer itself). ``clock`` feeds the :class:`LoaderStats`
+    wait accounting, so queue starvation is fake-clock testable.
     """
 
-    def __init__(self, batches: Iterator, prefetch: int = 2, sharding=None):
+    def __init__(
+        self,
+        batches: Iterator,
+        prefetch: int = 2,
+        sharding=None,
+        *,
+        device_put: Callable[[Any], Any] | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
         self._q: "queue.Queue[object]" = queue.Queue(maxsize=max(prefetch, 1))
         self._sharding = sharding
+        self._device_put = device_put
+        self._clock = clock
+        self.stats = LoaderStats(prefetch=max(prefetch, 1))
         self._err: list[BaseException] = []
         self._closed = threading.Event()
 
@@ -139,6 +189,8 @@ class AsyncLoader:
             try:
                 for b in batches:
                     _put_cancellable(self._q, b, self._closed)
+                    self.stats.produced += 1
+                    self.stats.max_depth = max(self.stats.max_depth, self._q.qsize())
                     if self._closed.is_set():
                         break
             except BaseException as e:
@@ -164,10 +216,33 @@ class AsyncLoader:
         _drain(self._q)  # a blocked put() wakes and sees the flag
         self._thread.join(timeout=5.0)
 
+    @property
+    def running(self) -> bool:
+        """True while the fill thread is alive (close() joins it)."""
+        return self._thread.is_alive()
+
+    def _get(self):
+        """Dequeue with starvation/wait accounting: an empty queue at
+        arrival means the consumer (ultimately the device) would stall."""
+        s = self.stats
+        s.depth = self._q.qsize()
+        starved = s.depth == 0
+        if starved:
+            s.starvation += 1
+        t0 = self._clock()
+        item = self._q.get()
+        s.wait_s += self._clock() - t0
+        if item is _SENTINEL:
+            if starved:  # waiting for end-of-stream is not starvation
+                s.starvation -= 1
+        else:
+            s.consumed += 1
+        return item
+
     def __iter__(self) -> Iterator:
         pending = None
         while True:
-            item = self._q.get()
+            item = self._get()
             if item is _SENTINEL:
                 break
             device_batch = self._put(item)
@@ -180,6 +255,8 @@ class AsyncLoader:
             raise self._err[0]
 
     def _put(self, batch):
+        if self._device_put is not None:
+            return self._device_put(batch)
         import jax
 
         if self._sharding is not None:

@@ -661,6 +661,24 @@ class Dataset:
             raise ValueError("no .batch(...) in the plan")
         return node
 
+    def bucket_grid_spec(self):
+        """The fixed :class:`~repro.core.device_pipeline.BucketGrid` this
+        plan's batches are assembled on, or None when the plan does not
+        bucket (then every batch already has the one ``max_len`` shape).
+        This is the static shape contract ``DeviceFeed`` pads against so
+        the jit'd device step compiles once per grid cell."""
+        from ..data.batching import bucket_columns
+        from .device_pipeline import BucketGrid
+
+        batch = self._batch_node()
+        if batch.bucket_by is None or not batch.buckets:
+            return None
+        cols = bucket_columns(batch.bucket_by)
+        widths = batch.buckets
+        if widths and isinstance(widths[0], (int, np.integer)):
+            widths = (widths,)
+        return BucketGrid(batch.batch_size, dict(zip(cols, widths)))
+
     def _has_memoized_frame(self) -> bool:
         """True when this chain's frame prefix is already materialized —
         possibly on an options-hop ancestor sharing the same prefix."""
@@ -788,13 +806,30 @@ class Dataset:
         prefetch: int | None = None,
         sharding: Any = None,
         executor: str | None = None,
-    ) -> AsyncLoader:
+        overlap: bool = False,
+        profiler: Any = None,
+    ):
         """Terminal: batches prefetched onto device via AsyncLoader, so host
-        preprocessing overlaps device compute end-to-end."""
+        preprocessing overlaps device compute end-to-end. With
+        ``overlap=True`` (or an explicit ``profiler``) returns a
+        :class:`~repro.core.device_pipeline.DeviceFeed` instead: batches
+        snap onto the plan's fixed bucket grid, transfers double-buffer
+        ahead of compute, and the feed's :class:`OverlapProfiler` accounts
+        device-idle time per step."""
         node = next((n for n in self._nodes if isinstance(n, P.Prefetch)), None)
         depth = prefetch if prefetch is not None else (node.prefetch if node else 2)
         shard = sharding if sharding is not None else (node.sharding if node else None)
         it = self.iter_batches(
             workers=workers, optimize=optimize, epochs=epochs, executor=executor
         )
+        if overlap or profiler is not None:
+            from .device_pipeline import DeviceFeed
+
+            return DeviceFeed(
+                it,
+                grid=self.bucket_grid_spec(),
+                prefetch=depth,
+                sharding=shard,
+                profiler=profiler,
+            )
         return AsyncLoader(it, prefetch=depth, sharding=shard)

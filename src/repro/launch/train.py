@@ -75,6 +75,13 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     args = ap.parse_args()
 
+    # Tuned env for everything forked from here (shard-executor workers,
+    # remote worker spawns). LD_PRELOAD/XLA pinning for *this* process must
+    # come from the wrapper: python -m repro.launch.env -- python -m ...
+    from .env import apply as apply_tuned_env
+
+    apply_tuned_env()
+
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     mesh = (
         make_production_mesh() if args.production_mesh

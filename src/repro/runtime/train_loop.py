@@ -44,6 +44,9 @@ def make_input_pipeline(
     prefetch: int = 2,
     sharding: Any = None,
     stats: dict | None = None,
+    overlap: bool = False,
+    donate: bool = True,
+    profiler: Any = None,
 ):
     """Wire a streaming :class:`~repro.core.dataset.Dataset` into the
     learner: batches stream out of the dataset's shard executor — reader
@@ -60,10 +63,30 @@ def make_input_pipeline(
     mid-epoch so remote workers shut down instead of preprocessing into a
     queue nobody drains. ``stats`` (a dict) receives executor and cache
     counters after each epoch.
+
+    ``overlap=True`` (or passing a ``profiler``) upgrades the tail to a
+    :class:`~repro.core.device_pipeline.DeviceFeed`: batches snap onto the
+    plan's fixed bucket grid (the jit'd step compiles once per grid cell),
+    transfers double-buffer one batch ahead, the consuming step donates
+    its input buffers (``donate``), and the feed's
+    :class:`~repro.core.device_pipeline.OverlapProfiler` accounts
+    host-wait vs device-compute time into a device-idle fraction — wrap
+    each step in ``feed.step(batch)`` to attribute its compute segment.
     """
     from ..core.async_loader import AsyncLoader
 
     batches = dataset.iter_batches(epochs=epochs, stats=stats)
+    if overlap or profiler is not None:
+        from ..core.device_pipeline import DeviceFeed
+
+        return DeviceFeed(
+            batches,
+            grid=dataset.bucket_grid_spec(),
+            prefetch=prefetch,
+            sharding=sharding,
+            donate=donate,
+            profiler=profiler,
+        )
     return AsyncLoader(batches, prefetch=prefetch, sharding=sharding)
 
 

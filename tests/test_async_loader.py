@@ -1,0 +1,204 @@
+"""Dedicated AsyncLoader suite: prefetch bound, shutdown, error
+propagation/sentinel ordering, double-buffering, and queue stats.
+
+The loader is the host half of the device-overlap story
+(tests/test_device_feed.py covers the device half); everything here runs
+with plain iterators and a stubbed ``device_put``, so the suite is
+executor-independent — it passes unchanged under the thread, process, and
+remote CI legs."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.async_loader import AsyncLoader
+
+
+def _batch(i, rows=2):
+    return {"x": np.full((rows, 2), i, dtype=np.int32)}
+
+
+def _wait_until(cond, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+def test_prefetch_bound_respected():
+    """With no consumer, the fill thread runs at most ``prefetch`` batches
+    ahead (queue full) plus the one batch blocked in put()."""
+    produced = []
+
+    def src():
+        for i in range(100):
+            produced.append(i)
+            yield _batch(i)
+
+    loader = AsyncLoader(src(), prefetch=3, device_put=lambda b: b)
+    try:
+        # the producer must stall at the bound, never race to 100
+        assert _wait_until(lambda: len(produced) >= 4)
+        time.sleep(0.05)  # any over-production would land in this window
+        assert len(produced) <= 4  # 3 queued + 1 in the blocked put
+        assert loader.stats.max_depth <= 3
+    finally:
+        loader.close()
+
+
+def test_close_mid_epoch_joins_fill_thread():
+    """close() after breaking out of an endless epoch stream unblocks the
+    producer's put() and joins the thread — no deadlock, no leak."""
+    source_closed = []
+
+    class Endless:
+        def __iter__(self):
+            i = 0
+            while True:
+                yield _batch(i)
+                i += 1
+
+        def close(self):
+            source_closed.append(True)
+
+    loader = AsyncLoader(Endless(), prefetch=2, device_put=lambda b: b)
+    it = iter(loader)
+    for _ in range(3):
+        next(it)
+    loader.close()
+    assert not loader.running
+    # the fill thread's finally ran the source finalizer exactly once
+    assert source_closed == [True]
+
+
+def test_producer_exception_propagates():
+    def src():
+        yield _batch(0)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        list(AsyncLoader(src(), prefetch=2, device_put=lambda b: b))
+
+
+def test_sentinel_ordering_after_error():
+    """Batches produced before the error are all yielded first; the error
+    surfaces only at the end of iteration (the sentinel follows the last
+    good batch, it never overtakes it)."""
+    def src():
+        for i in range(4):
+            yield _batch(i)
+        raise ValueError("late failure")
+
+    loader = AsyncLoader(src(), prefetch=8, device_put=lambda b: b)
+    got = []
+    with pytest.raises(ValueError, match="late failure"):
+        for b in loader:
+            got.append(int(b["x"][0, 0]))
+    assert got == [0, 1, 2, 3]
+
+
+def test_error_before_first_batch_raises_promptly():
+    def src():
+        raise OSError("no data")
+        yield  # pragma: no cover - makes src a generator
+
+    with pytest.raises(OSError, match="no data"):
+        list(AsyncLoader(src(), prefetch=1, device_put=lambda b: b))
+
+
+def test_double_buffering_yields_k_while_k1_transfers():
+    """The transfer of batch k+1 is issued before batch k is yielded —
+    observed through a stubbed device_put that logs event order."""
+    events = []
+
+    def fake_device_put(batch):
+        events.append(("put", int(batch["x"][0, 0])))
+        return batch
+
+    loader = AsyncLoader(
+        (_batch(i) for i in range(5)), prefetch=2, device_put=fake_device_put
+    )
+    for b in loader:
+        events.append(("yield", int(b["x"][0, 0])))
+    puts = [i for kind, i in events if kind == "put"]
+    assert puts == [0, 1, 2, 3, 4]
+    for k in range(4):
+        assert events.index(("put", k + 1)) < events.index(("yield", k)), (
+            f"batch {k + 1} must be in flight before batch {k} is consumed"
+        )
+
+
+def test_starvation_counter_and_fake_clock_wait():
+    """A producer gated on an event starves the consumer: the empty-queue
+    get increments the counter and the (injectable) clock accounts the
+    wait. The fake clock only advances when the producer runs, so the
+    measured wait is exactly the producer's simulated delay."""
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+            self._lock = threading.Lock()
+
+        def advance(self, dt):
+            with self._lock:
+                self.t += dt
+
+        def __call__(self):
+            with self._lock:
+                return self.t
+
+    clock = FakeClock()
+    gate = threading.Event()
+
+    def src():
+        yield _batch(0)  # ungated pair: fills the queue before the
+        yield _batch(1)  # consumer runs (no starvation on these)
+        gate.wait(timeout=5.0)
+        clock.advance(7.0)  # the slow batch "takes" 7 fake seconds
+        yield _batch(2)
+
+    loader = AsyncLoader(src(), prefetch=2, device_put=lambda b: b, clock=clock)
+    it = iter(loader)
+    assert _wait_until(lambda: loader.stats.produced >= 2)
+    # first yield consumes batches 0 AND 1 (double buffering holds one
+    # pending), both from a non-empty queue: no starvation yet
+    assert int(next(it)["x"][0, 0]) == 0
+    assert loader.stats.starvation == 0
+
+    consumed = []
+    t = threading.Thread(target=lambda: consumed.extend(it), daemon=True)
+    t.start()
+    # consumer is now blocked on an empty queue (producer gated)
+    assert _wait_until(lambda: loader.stats.starvation == 1)
+    gate.set()
+    t.join(timeout=5.0)
+    assert len(consumed) == 2  # batch 1 (pending) + batch 2
+    assert loader.stats.starvation == 1
+    assert loader.stats.wait_s == pytest.approx(7.0)
+    assert loader.stats.consumed == 3
+
+
+def test_queue_depth_gauges():
+    """max_depth tracks how much of the prefetch budget the producer used."""
+    loader = AsyncLoader(
+        (_batch(i) for i in range(10)), prefetch=4, device_put=lambda b: b
+    )
+    assert _wait_until(lambda: loader.stats.max_depth >= 4)
+    out = list(loader)
+    assert len(out) == 10
+    s = loader.stats
+    assert s.prefetch == 4
+    assert s.produced == 10 and s.consumed == 10
+    assert 1 <= s.max_depth <= 4
+
+
+def test_jax_device_put_default_path():
+    """Without a stub, leaves come back as jax arrays (the seed behavior)."""
+    import jax
+
+    out = list(AsyncLoader(iter([_batch(3)]), prefetch=1))
+    assert isinstance(out[0]["x"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(out[0]["x"]), _batch(3)["x"])
