@@ -16,6 +16,14 @@ fraction must stay at or below ``--max-idle`` — the paper's claim (host
 preprocessing hidden behind device compute) as an absolute ceiling, which
 is machine-portable where absolute seconds are not.
 
+``--mode kernels``: gates the bytes-backend comparison
+(``benchmarks/results/kernel_backends.csv``, written by ``bench_kernels``).
+The gate metric is *relative* — the fused backend's speedup over loops
+measured in the same process — so it is machine-portable: every baseline
+row must be present in the fresh run, and every fresh ``fused`` row must
+keep ``speedup_vs_loops >= --min-speedup``. Rows without a gate metric
+(e.g. the pallas row on a TPU-less runner) are informational.
+
 Refresh the committed baselines by re-running the benches on the reference
 machine and committing the regenerated files. The tokenize baseline is
 absolute throughput: regenerate it when the CI runner class changes, or
@@ -85,15 +93,57 @@ def check_overlap(args):
     return 0
 
 
+def _load_backend_rows(path):
+    with open(path, newline="") as fh:
+        return {(row["name"], row["backend"]): row for row in csv.DictReader(fh)}
+
+
+def check_kernels(args):
+    baseline = _load_backend_rows(args.baseline)
+    fresh = _load_backend_rows(args.fresh)
+    if not baseline:
+        print(f"no backend rows in {args.baseline}")
+        return 1
+    failures = []
+    for key in sorted(baseline):
+        label = "/".join(key)
+        row = fresh.get(key)
+        if row is None:
+            failures.append(f"{label}: missing from fresh run")
+            continue
+        speedup = row.get("speedup_vs_loops") or ""
+        if not speedup:
+            print(f"{label}: informational ({row.get('note') or 'no metric'})")
+            continue
+        got = float(speedup)
+        floor = args.min_speedup if key[1] != "loops" else 0.0
+        status = "OK" if got >= floor else "REGRESSION"
+        print(
+            f"{label}: {got:.3f}x vs loops "
+            f"({row.get('mb_per_s', '?')} MB/s, floor {floor:.2f}x) {status}"
+        )
+        if got < floor:
+            failures.append(f"{label}: {got:.3f}x < floor {floor:.2f}x")
+    if failures:
+        print()
+        print(f"kernel backend gate failed ({len(failures)} row(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"kernel backend gate passed: {len(baseline)} row(s)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", type=Path, required=True)
     ap.add_argument("--fresh", type=Path, required=True)
     ap.add_argument(
         "--mode",
-        choices=["tokenize", "overlap"],
+        choices=["tokenize", "overlap", "kernels"],
         default="tokenize",
-        help="tokenize: CSV throughput gate; overlap: device-idle JSON gate",
+        help="tokenize: CSV throughput gate; overlap: device-idle JSON "
+        "gate; kernels: relative bytes-backend speedup gate",
     )
     ap.add_argument(
         "--max-regression",
@@ -107,10 +157,19 @@ def main(argv=None):
         default=0.05,
         help="overlap mode: fail when device-idle fraction exceeds this",
     )
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=1.05,
+        help="kernels mode: fail when a non-loops backend's "
+        "speedup_vs_loops falls below this",
+    )
     args = ap.parse_args(argv)
 
     if args.mode == "overlap":
         return check_overlap(args)
+    if args.mode == "kernels":
+        return check_kernels(args)
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)

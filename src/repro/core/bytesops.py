@@ -24,8 +24,40 @@ Catalyst-style adjacent-op fusion:
   in one pass is equivalent to sequential removal)
 * adjacent ``COLLAPSE`` ops deduplicate.
 
-The unfused path is the paper-faithful P3SAPP executor; fusion is a
-beyond-paper optimization measured in EXPERIMENTS.md §Perf (data layer).
+Backends: megapass lowering
+---------------------------
+Beyond adjacent fusion, :func:`compile_megapass` lowers a whole op chain to
+a small *pass program* executed by :func:`run_megapass` — the whole-stage
+codegen analogue: instead of materializing one intermediate buffer per op,
+the chain is segmented into
+
+* **scan passes** — a maximal ``LUT``/``SPAN`` run.  The value LUTs compose
+  into one 256-entry table; each span's open/close detection becomes a
+  boolean LUT over the *raw* bytes (``composed_lut_so_far == open_byte``),
+  and the span masks are made sequential-exact by zeroing every span's
+  depth delta at positions an earlier span already deleted.  One gather at
+  the end applies the composed LUT and compacts — a single output write
+  where the loops backend writes once per op.
+* **word passes** — an optional pure-LUT prefix plus a maximal
+  ``COLLAPSE``/``WORDPRED`` run.  Words are segmented once, the OR of all
+  predicates is evaluated on that one segmentation, and a single keep-mask
+  compaction emits surviving words with exactly one space per gap (word
+  predicates are word-local and every word-level stage re-collapses, so
+  this equals sequential application byte-for-byte).
+* **barriers** — ``REPLACE``/``REGEX`` ops change lengths via
+  ``bytes.replace``/``re.sub`` and run materialized, exactly as in the
+  loops backend.
+
+:func:`execute_ops` dispatches between backends — ``loops`` (one pass per
+op, the paper-faithful P3SAPP executor), ``fused`` (megapass), and
+``pallas`` (megapass whose scan passes offload to the
+``kernels/text_clean`` Pallas kernel when the pass matches the kernel's
+shape, falling back to the host scan otherwise).  Selection:  explicit
+argument > ``REPRO_BYTES_BACKEND`` env var > ``loops``.  **All backends
+are byte-identical by contract**; any chain the megapass compiler cannot
+prove exact (e.g. a LUT that remaps the row separator) falls back to
+``loops`` wholesale.  Fusion wins are measured in EXPERIMENTS.md §Perf
+(data layer) and ``benchmarks/bench_kernels.py``.
 
 Semantics contract (shared with the row-wise oracles in ``stages.py``)
 ----------------------------------------------------------------------
@@ -37,6 +69,7 @@ Semantics contract (shared with the row-wise oracles in ``stages.py``)
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Callable, Sequence
 
@@ -618,3 +651,377 @@ def fuse_ops(ops: Sequence[Op]) -> list[Op]:
         else:
             fused.append(op)
     return fused
+
+
+# ---------------------------------------------------------------------------
+# Megapass backend: whole-chain lowering to single-sweep pass programs
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("loops", "fused", "pallas")
+BACKEND_ENV = "REPRO_BYTES_BACKEND"
+
+_IDENTITY_LUT = np.arange(256, dtype=np.uint8)
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Backend selection: explicit argument > REPRO_BYTES_BACKEND > loops."""
+    b = backend or os.environ.get(BACKEND_ENV, "") or "loops"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown bytes backend {b!r}; expected one of {BACKENDS}")
+    return b
+
+
+@dataclass(frozen=True)
+class ScanPass:
+    """A maximal LUT/SPAN run lowered to one sweep + one compaction.
+
+    ``lut`` is the full composed value LUT of the run; ``spans`` holds one
+    detection pair per span op describing open/close positions in terms of
+    the *raw* bytes (``composed_lut_at_that_point == delimiter``), so no
+    intermediate values materialize.  Each detector is either a plain byte
+    value (the delimiter's preimage under the composed LUT is a single
+    byte — one vector compare) or a 256-entry boolean LUT (general case).
+    ``pairs`` keeps the mapped (open, close) byte values for the Pallas
+    eligibility check."""
+
+    lut: np.ndarray
+    spans: tuple[tuple[object, object], ...]
+    pairs: tuple[tuple[int, int], ...]
+
+
+@dataclass(frozen=True)
+class WordPass:
+    """An optional pure-LUT prefix + a maximal COLLAPSE/WORDPRED run: one
+    segmentation, OR of all predicates, one keep-mask compaction whose
+    output is fully collapsed (every word-level stage re-collapses)."""
+
+    lut: np.ndarray | None
+    preds: tuple[tuple[Callable, bool], ...]  # (pred, needs_hashes)
+
+
+def _sep_safe(lut: np.ndarray) -> bool:
+    """True iff ``lut`` maps ROW_SEP to ROW_SEP and nothing else to it —
+    the condition under which separator positions in the raw buffer equal
+    separator positions in the mapped values (required wherever the fused
+    program consults row structure)."""
+    return bool(lut[ROW_SEP] == ROW_SEP and not (lut[1:] == ROW_SEP).any())
+
+
+def _compose_luts(ops: Sequence[Op]) -> np.ndarray:
+    lut = _IDENTITY_LUT
+    for op in ops:
+        lut = op.lut[lut]
+    return lut
+
+
+def _detector(cur: np.ndarray, byte: int):
+    """Raw-byte detector for ``composed_lut[raw] == byte``: the preimage
+    byte itself when unique (vector compare at run time), else the boolean
+    LUT (gather)."""
+    pre = np.flatnonzero(cur == byte)
+    if pre.size == 1:
+        return int(pre[0])
+    return cur == byte
+
+
+def _detect(buf: np.ndarray, det) -> np.ndarray:
+    if isinstance(det, np.ndarray):
+        return det[buf]
+    return buf == det
+
+
+def _compile_scan(run: Sequence[Op]) -> ScanPass | None:
+    cur = _IDENTITY_LUT
+    spans: list[tuple[object, object]] = []
+    pairs: list[tuple[int, int]] = []
+    for op in run:
+        if op.kind == "lut":
+            cur = op.lut[cur]
+        else:
+            open_b, close_b = op.span
+            # Span detection consults row structure (per-row depth reset)
+            # and delimiter identity; bail to the loops backend on the
+            # degenerate shapes where raw-byte detection is not exact.
+            if not _sep_safe(cur) or ROW_SEP in (open_b, close_b) or open_b == close_b:
+                return None
+            spans.append((_detector(cur, open_b), _detector(cur, close_b)))
+            pairs.append((open_b, close_b))
+    return ScanPass(lut=cur, spans=tuple(spans), pairs=tuple(pairs))
+
+
+def compile_megapass(ops: Sequence[Op]) -> list[tuple[str, object]] | None:
+    """Lower an op chain to a pass program: ``[("scan", ScanPass) |
+    ("word", WordPass) | ("op", Op), ...]``.  Returns ``None`` when any
+    segment cannot be proven byte-identical to sequential execution —
+    callers then fall back to :func:`apply_ops`."""
+    ops = list(ops)
+    passes: list[tuple[str, object]] = []
+    i, n = 0, len(ops)
+    while i < n:
+        kind = ops[i].kind
+        if kind in ("replace", "regex"):
+            passes.append(("op", ops[i]))
+            i += 1
+            continue
+        head_lut: np.ndarray | None = None
+        if kind in ("lut", "span"):
+            j = i
+            while j < n and ops[j].kind in ("lut", "span"):
+                j += 1
+            # A trailing pure-LUT suffix feeds the following word pass (so
+            # e.g. [unwanted-LUT, collapse, wordpred] is ONE pass, not two).
+            t = j
+            if j < n and ops[j].kind in ("collapse", "wordpred"):
+                while t > i and ops[t - 1].kind == "lut":
+                    t -= 1
+            if t > i:
+                scan = _compile_scan(ops[i:t])
+                if scan is None:
+                    return None
+                passes.append(("scan", scan))
+            if t < j:
+                head_lut = _compose_luts(ops[t:j])
+                if not _sep_safe(head_lut):
+                    return None
+            i = j
+            if head_lut is None:
+                continue
+        if i < n and ops[i].kind in ("collapse", "wordpred"):
+            j = i
+            while j < n and ops[j].kind in ("collapse", "wordpred"):
+                j += 1
+            preds = tuple(
+                (op.pred, op.needs_hashes) for op in ops[i:j] if op.kind == "wordpred"
+            )
+            passes.append(("word", WordPass(lut=head_lut, preds=preds)))
+            i = j
+            continue
+        if head_lut is not None:  # pragma: no cover - unreachable by construction
+            return None
+        return None  # unknown op kind
+    return passes
+
+
+def _run_scan(buf: np.ndarray, sp: ScanPass) -> np.ndarray:
+    """One sweep for a LUT/SPAN run.  Span masking is *sparse*: delimiter
+    bytes are rare in real text, so depths are computed on the hit list
+    (O(hits)) and dead byte ranges scattered into the keep mask — the
+    full-buffer work is two compares and one flatnonzero per span instead
+    of an O(n) cumsum.  Semantics match iterated :func:`span_strip`
+    exactly: row-local depth (reset at every separator), any byte at
+    positive depth dies, every close byte dies, spans already deleted by
+    an earlier span op neither open, close, nor count."""
+    identity = sp.lut is _IDENTITY_LUT
+    if buf.size == 0 or not sp.spans:
+        return buf if identity else sp.lut[buf]
+    sep_idx = np.flatnonzero(buf == ROW_SEP)
+    alive = np.ones(buf.size, dtype=bool)
+    for open_det, close_det in sp.spans:
+        opens = _detect(buf, open_det)
+        closes = _detect(buf, close_det)
+        np.logical_or(opens, closes, out=opens)
+        hits = np.flatnonzero(opens)
+        if hits.size:
+            live = alive[hits]
+            if not live.all():
+                hits = hits[live]
+        if hits.size == 0:
+            continue
+        is_close = closes[hits]
+        sign = np.where(is_close, np.int32(-1), np.int32(1))
+        g = np.cumsum(sign)
+        rows_h = np.searchsorted(sep_idx, hits)  # hit's row (sep_idx entry = row end)
+        first = np.ones(hits.size, dtype=bool)
+        first[1:] = rows_h[1:] != rows_h[:-1]
+        fpos = np.flatnonzero(first)
+        counts = np.diff(np.append(fpos, hits.size))
+        d = g - np.repeat((g - sign)[fpos], counts)  # row-local inclusive depth
+        if sep_idx.size:
+            row_end = np.where(
+                rows_h < sep_idx.size,
+                sep_idx[np.minimum(rows_h, sep_idx.size - 1)],
+                buf.size,
+            )
+        else:
+            row_end = np.full(hits.size, buf.size, dtype=np.int64)
+        nxt = np.empty_like(hits)
+        nxt[:-1] = hits[1:]
+        nxt[-1] = buf.size
+        end = np.minimum(nxt, row_end)
+        inside = d > 0
+        dead = inside | is_close
+        # A byte at positive depth kills everything up to the next hit (or
+        # row end — unclosed spans swallow the rest of the row, never the
+        # separator); a stray close at depth <= 0 kills only itself.
+        lens = np.where(inside, end - hits, 1)[dead]
+        alive[_span_indices(hits[dead], lens)] = False
+    out = buf[alive]
+    return out if identity else sp.lut[out]
+
+
+def _pallas_scan_args(sp: ScanPass) -> dict | None:
+    """Kernel-shape check for a scan pass: composed LUT is identity or
+    lowercasing, spans are the canonical ``<>`` / ``()`` prefix (in that
+    order), and each span's detection LUT is exactly what the kernel
+    computes (``final_lut[raw] == delimiter``)."""
+    if np.array_equal(sp.lut, LOWER_LUT):
+        lower = True
+    elif np.array_equal(sp.lut, _IDENTITY_LUT):
+        lower = False
+    else:
+        return None
+    allowed = ((ord("<"), ord(">")), (ord("("), ord(")")))
+    if sp.pairs not in (allowed[:1], allowed[1:], allowed, ()):
+        return None
+
+    def det_array(det):
+        return det if isinstance(det, np.ndarray) else _IDENTITY_LUT == det
+
+    for (open_b, close_b), (open_det, close_det) in zip(sp.pairs, sp.spans):
+        if not np.array_equal(det_array(open_det), sp.lut == open_b):
+            return None
+        if not np.array_equal(det_array(close_det), sp.lut == close_b):
+            return None
+    return {
+        "lower": lower,
+        "strip_html": allowed[0] in sp.pairs,
+        "strip_parens": allowed[1] in sp.pairs,
+    }
+
+
+def _run_scan_pallas(buf: np.ndarray, sp: ScanPass) -> np.ndarray:
+    """Offload a scan pass to the Pallas text-clean kernel when it matches
+    the kernel's shape; byte-identical host fallback otherwise (also taken
+    when jax is absent, e.g. on the jax-free remote shard workers).
+
+    Multiprocessing children (the fork-based process shard executor and
+    the pipeline's process pool) always take the host fallback: jax is
+    multithreaded, so touching it in a forked child of a process whose
+    parent may already have imported it is a deadlock — and the fallback
+    is byte-identical by contract, so declining costs only the offload."""
+    kwargs = _pallas_scan_args(sp)
+    if kwargs is None or not sp.spans or buf.size == 0:
+        return _run_scan(buf, sp)  # pure-LUT passes don't pay padding traffic
+    import multiprocessing as _mp
+
+    if _mp.parent_process() is not None:
+        return _run_scan(buf, sp)
+    try:
+        from repro.kernels.text_clean.ops import scan_flat
+    except Exception:
+        return _run_scan(buf, sp)
+    out = scan_flat(buf, **kwargs)
+    if out is None:  # kernel declined (no jax, padding blow-up, …)
+        return _run_scan(buf, sp)
+    return out
+
+
+def _span_indices(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Flat indices covering ``[starts[k], starts[k]+lens[k])`` for all k —
+    O(total span bytes), no Python loop."""
+    total = int(lens.sum())
+    cum = np.cumsum(lens) - lens
+    return np.repeat(starts - cum, lens) + np.arange(total, dtype=np.int64)
+
+
+def _run_word(buf: np.ndarray, wp: WordPass) -> np.ndarray:
+    if buf.size == 0:
+        return buf
+    lut = wp.lut
+    needs = any(nh for _, nh in wp.preds)
+    # Word content is only consulted by hash-based predicates; otherwise
+    # detection runs via boolean LUTs over the raw bytes and the value LUT
+    # applies once, after compaction, to the (smaller) output.
+    vals = buf if lut is None else (lut[buf] if needs else None)
+    if vals is not None:
+        sep = vals == ROW_SEP
+        delim = sep | (vals == SPACE)
+    else:
+        sep = buf == ROW_SEP  # lut is sep-safe (checked at compile time)
+        delim = (lut == SPACE)[buf] | sep
+    isw = ~delim
+    starts = isw.copy()
+    starts[1:] &= delim[:-1]
+    start_idx = np.flatnonzero(starts)
+    if start_idx.size == 0:  # no words: a collapsed row is empty
+        out = (buf if vals is None else vals)[sep]
+        return out  # ROW_SEP is lut-invariant, so no final map needed
+    lengths = np.add.reduceat(isw.astype(np.int32), start_idx)
+    bad = np.zeros(start_idx.size, dtype=bool)
+    if wp.preds:
+        view = WordView(vals, start_idx, lengths) if needs else None
+        for pred, _nh in wp.preds:
+            bad |= pred(view, lengths)
+    if bad.any():
+        keep = isw
+        keep[_span_indices(start_idx[bad], lengths[bad])] = False
+        good = ~bad
+        good_starts = start_idx[good]
+        good_lens = lengths[good]
+    else:
+        keep = isw
+        good_starts = start_idx
+        good_lens = lengths
+    # Collapse: emit exactly one space per gap between consecutive
+    # surviving words of a row — the byte right after a surviving word's
+    # end is always a (mapped) space when another word follows in the same
+    # row, and all of a gap's space bytes map to the same output byte, so
+    # keeping this one is byte-identical to sequential collapse.
+    sep_idx = np.flatnonzero(sep)
+    rows_g = np.searchsorted(sep_idx, good_starts)
+    if good_starts.size > 1:
+        not_last = np.empty(good_starts.size, dtype=bool)
+        not_last[:-1] = rows_g[:-1] == rows_g[1:]
+        not_last[-1] = False
+        keep[good_starts[not_last] + good_lens[not_last]] = True
+    keep |= sep
+    out = (buf if vals is None else vals)[keep]
+    return out if vals is not None or lut is None else lut[out]
+
+
+def run_megapass(
+    buf: np.ndarray, passes: Sequence[tuple[str, object]], *, pallas: bool = False
+) -> np.ndarray:
+    for kind, p in passes:
+        if kind == "scan":
+            buf = _run_scan_pallas(buf, p) if pallas else _run_scan(buf, p)
+        elif kind == "word":
+            buf = _run_word(buf, p)
+        else:
+            buf = apply_op(buf, p)
+    return buf
+
+
+# compile_megapass is cheap but runs once per shard x column; memoize by op
+# identity (ops are built once at plan-compile time and live as long as the
+# program).  Holding the ops tuple keeps the ids stable — a live object can
+# never share an id with a cached one.
+_MEGAPASS_CACHE: dict[tuple[int, ...], tuple[tuple[Op, ...], object]] = {}
+
+
+def _compile_cached(ops: Sequence[Op]):
+    key = tuple(id(op) for op in ops)
+    hit = _MEGAPASS_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    prog = compile_megapass(ops)
+    if len(_MEGAPASS_CACHE) >= 128:
+        _MEGAPASS_CACHE.clear()
+    _MEGAPASS_CACHE[key] = (tuple(ops), prog)
+    return prog
+
+
+def execute_ops(
+    buf: np.ndarray, ops: Sequence[Op], backend: str | None = None
+) -> np.ndarray:
+    """Run an op chain under the selected backend (see module docstring).
+
+    Byte-identical across backends; chains the megapass compiler cannot
+    prove exact fall back to the loops backend wholesale."""
+    b = resolve_backend(backend)
+    if b == "loops" or not ops:
+        return apply_ops(buf, ops)
+    prog = _compile_cached(ops)
+    if prog is None:
+        return apply_ops(buf, ops)
+    return run_megapass(buf, prog, pallas=(b == "pallas"))

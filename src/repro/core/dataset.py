@@ -322,7 +322,8 @@ class Dataset:
             row_filters = None
             if mode == "two-pass":
                 pass1, program = EX.split_dedup_programs(
-                    frame_nodes, optimize=optimize, count_columns=cols
+                    frame_nodes, optimize=optimize, count_columns=cols,
+                    backend=self._resolve_backend(),
                 )
                 row_filters = self._elect_survivors(
                     shards, pass1, exec_kw, stats
@@ -330,7 +331,7 @@ class Dataset:
             else:
                 program = EX.compile_shard_program(
                     frame_nodes, optimize=optimize, output_columns=cols,
-                    count_words=cols,
+                    count_words=cols, backend=self._resolve_backend(),
                 )
             exec_ = EX.make_executor(
                 shards, program, row_filters=row_filters, **exec_kw
@@ -365,49 +366,13 @@ class Dataset:
     def _elect_survivors(
         self, shards, pass1, exec_kw: dict, stats: dict | None
     ) -> dict[int, np.ndarray]:
-        """Pass 1 of two-pass dedup: run the key-election program over
-        every shard and keep, per key digest, the minimal ``(shard index,
-        row index)`` occurrence — the row whole-frame keep-first dedup
-        retains. Returns per-shard sorted survivor row indices (an entry
-        for every shard, possibly empty)."""
+        """Pass 1 of two-pass dedup — delegates to the shared
+        :func:`repro.core.executor.elect_survivors` (the streaming batch
+        path in :func:`repro.core.plan.stream_batches` uses the same
+        election)."""
         from . import executor as EX
 
-        survivors: dict[bytes, tuple[int, int]] = {}
-        exec1 = EX.make_executor(shards, pass1, **exec_kw)
-        try:
-            for res in exec1:
-                keys = res.tokens.get(EX.DEDUP_KEYS)
-                if keys is None or not len(keys):
-                    continue
-                si = res.shard_index
-                # Within-shard first occurrence per key is vectorized
-                # (np.unique on the 16-byte digests); only the per-shard
-                # uniques cross into the Python merge loop.
-                voids = np.ascontiguousarray(keys).view(
-                    np.dtype((np.void, 16))
-                ).reshape(-1)
-                uniq, first = np.unique(voids, return_index=True)
-                for k_void, ri in zip(uniq, first):
-                    k = k_void.tobytes()
-                    best = survivors.get(k)
-                    if best is None or (si, int(ri)) < best:
-                        survivors[k] = (si, int(ri))
-        finally:
-            exec1.stop()
-            if stats is not None:
-                stats["token_cache_hits"] = (
-                    stats.get("token_cache_hits", 0) + exec1.token_cache_hits
-                )
-                stats["token_cache_misses"] = (
-                    stats.get("token_cache_misses", 0) + exec1.token_cache_misses
-                )
-        per_shard: dict[int, list[int]] = {i: [] for i in range(len(shards))}
-        for si, ri in survivors.values():
-            per_shard[si].append(ri)
-        return {
-            i: np.sort(np.asarray(rows, dtype=np.int64))
-            for i, rows in per_shard.items()
-        }
+        return EX.elect_survivors(shards, pass1, exec_kw, stats)
 
     def _resolve_bucket_widths(
         self, spec: TokenSpec, widths: Sequence[int] | None, n_buckets: int
@@ -549,6 +514,24 @@ class Dataset:
         root = default_cache_dir() if directory is True else Path(directory)
         return self._with_options(cache_dir=root)
 
+    def backend(self, name: str) -> "Dataset":
+        """Select the byte-kernel backend compiled into this chain's shard
+        programs: ``"loops"`` (per-op vectorized passes), ``"fused"``
+        (single-pass megapass lowering), or ``"pallas"`` (fused, with an
+        eligible cleaning prefix offloaded to the Pallas text-scan kernel).
+        Outputs are byte-identical across backends — this is a physical
+        executor choice, so shard-cache keys and memoized frames are shared
+        across backends. Default resolves from ``REPRO_BYTES_BACKEND``,
+        then ``"loops"``."""
+        from . import bytesops as B
+
+        if name not in B.BACKENDS:
+            raise ValueError(f"unknown bytes backend {name!r}; one of {B.BACKENDS}")
+        return self._with_options(backend=name)
+
+    def _resolve_backend(self) -> str | None:
+        return self._options.get("backend")
+
     def _resolve_cache_dir(self) -> Path | None:
         if "cache_dir" in self._options:
             return self._options["cache_dir"]  # .cache(False) stores None: off
@@ -577,7 +560,9 @@ class Dataset:
         return P.optimize_plan(frame_nodes, self._needed_columns()) + array_nodes
 
     def explain(self) -> str:
-        return P.explain(self._nodes, self._needed_columns())
+        return P.explain(
+            self._nodes, self._needed_columns(), backend=self._resolve_backend()
+        )
 
     # -- execution helpers -------------------------------------------------
     def _frame_prefix_dataset(self) -> "Dataset":
@@ -638,7 +623,8 @@ class Dataset:
             ds = ds._parent
         if base is None:
             hit = P.execute_frame_plan(
-                owner._nodes, workers=workers, optimize=optimize, final_schema=owner.schema
+                owner._nodes, workers=workers, optimize=optimize,
+                final_schema=owner.schema, backend=self._resolve_backend(),
             )
         else:
             suffix = owner._nodes[base_len:]
@@ -648,6 +634,7 @@ class Dataset:
             hit = P.continue_frame_plan(
                 base[0], base[1], suffix,
                 workers=workers, optimize=optimize, seen_cleaning=seen_cleaning,
+                backend=self._resolve_backend(),
             )
         owner._frame_cache[key] = hit
         return hit
@@ -775,6 +762,7 @@ class Dataset:
                 cache_dir=self._resolve_cache_dir(),
                 stats=stats,
                 remote=self._options.get("remote"),
+                backend=self._resolve_backend(),
             )
             return
         arrays = self.arrays(workers=workers, optimize=optimize)

@@ -166,13 +166,21 @@ class ShardProgram:
     """Per-shard physical program: parse ``fields``, run ``steps``, emit
     ``output_columns`` (empty tuple = every live column). ``tokens``
     appends token encoding; ``count_words`` appends per-shard word
-    counting (vocabulary fitting)."""
+    counting (vocabulary fitting).
+
+    ``backend`` is the bytesops execution backend the program's op chains
+    run under (resolved at compile time from the explicit option or
+    ``REPRO_BYTES_BACKEND``, so it travels — pickled with the program —
+    to process-pool and remote workers whose environment may differ).
+    Backends are byte-identical by contract, which is why the *cache*
+    lineage fingerprints deliberately exclude it."""
 
     fields: tuple[str, ...]
     steps: tuple[Step, ...]
     output_columns: tuple[str, ...] = ()
     tokens: TokenPlan | None = None
     count_words: tuple[str, ...] = ()
+    backend: str = "loops"
 
     @property
     def has_dedup(self) -> bool:
@@ -190,6 +198,7 @@ def compile_shard_program(
     output_columns: Sequence[str] = (),
     tokens: TokenPlan | None = None,
     count_words: Sequence[str] = (),
+    backend: str | None = None,
 ) -> ShardProgram:
     """Compile an (optimized) frame-level plan into a :class:`ShardProgram`.
 
@@ -224,6 +233,7 @@ def compile_shard_program(
         tuple(output_columns),
         tokens=tokens,
         count_words=tuple(count_words),
+        backend=B.resolve_backend(backend),
     )
 
 
@@ -421,6 +431,9 @@ def split_dedup_programs(
     *,
     optimize: bool = True,
     count_columns: Sequence[str] = (),
+    output_columns: Sequence[str] | None = None,
+    tokens: TokenPlan | None = None,
+    backend: str | None = None,
 ) -> tuple[ShardProgram, ShardProgram]:
     """Compile the two programs of two-pass canonical-survivor dedup.
 
@@ -434,6 +447,12 @@ def split_dedup_programs(
     step replaced by ``dedup_take`` of the elected survivor rows, so the
     stream stays a pure per-shard program (process-executor capable, no
     cross-shard mutable state) yet byte-identical to whole-frame.
+
+    Pass 2's tail is configurable so both streaming terminals share the
+    protocol: ``count_columns`` appends word counting (``fit_vocab``),
+    ``tokens`` appends token encoding (``iter_batches``). By default the
+    emitted columns are ``count_columns``; pass ``output_columns`` to
+    override (e.g. the tokenize spec columns).
     """
     from . import plan as P
 
@@ -450,15 +469,19 @@ def split_dedup_programs(
     prefix = list(frame_nodes[:j])
     if optimize:
         prefix = P.optimize_plan(prefix, subset)
-    pass1 = compile_shard_program(prefix, optimize=optimize)
+    pass1 = compile_shard_program(prefix, optimize=optimize, backend=backend)
     pass1 = dataclasses.replace(
         pass1, steps=pass1.steps + (("dedup_emit", subset),)
     )
     full = compile_shard_program(
         frame_nodes,
         optimize=optimize,
-        output_columns=count_columns,
+        output_columns=(
+            count_columns if output_columns is None else output_columns
+        ),
+        tokens=tokens,
         count_words=count_columns,
+        backend=backend,
     )
     steps2 = list(full.steps)
     if steps2[j - 1] != ("dedup", subset):  # nodes[1:] map 1:1 to steps
@@ -469,6 +492,56 @@ def split_dedup_programs(
     steps2[j - 1] = ("dedup_take", subset)
     pass2 = dataclasses.replace(full, steps=tuple(steps2))
     return pass1, pass2
+
+
+def elect_survivors(
+    shards: Sequence[str | Path],
+    pass1: ShardProgram,
+    exec_kw: dict,
+    stats: dict | None = None,
+) -> dict[int, np.ndarray]:
+    """Run pass 1 of two-pass dedup (see :func:`split_dedup_programs`)
+    over every shard and keep, per key digest, the minimal ``(shard
+    index, row index)`` occurrence — the row whole-frame keep-first dedup
+    retains. Returns per-shard sorted survivor row indices (an entry for
+    every shard, possibly empty), the ``row_filters`` input of
+    :func:`make_executor`."""
+    survivors: dict[bytes, tuple[int, int]] = {}
+    exec1 = make_executor(shards, pass1, **exec_kw)
+    try:
+        for res in exec1:
+            keys = res.tokens.get(DEDUP_KEYS)
+            if keys is None or not len(keys):
+                continue
+            si = res.shard_index
+            # Within-shard first occurrence per key is vectorized
+            # (np.unique on the 16-byte digests); only the per-shard
+            # uniques cross into the Python merge loop.
+            voids = np.ascontiguousarray(keys).view(
+                np.dtype((np.void, 16))
+            ).reshape(-1)
+            uniq, first = np.unique(voids, return_index=True)
+            for k_void, ri in zip(uniq, first):
+                k = k_void.tobytes()
+                best = survivors.get(k)
+                if best is None or (si, int(ri)) < best:
+                    survivors[k] = (si, int(ri))
+    finally:
+        exec1.stop()
+        if stats is not None:
+            stats["token_cache_hits"] = (
+                stats.get("token_cache_hits", 0) + exec1.token_cache_hits
+            )
+            stats["token_cache_misses"] = (
+                stats.get("token_cache_misses", 0) + exec1.token_cache_misses
+            )
+    per_shard: dict[int, list[int]] = {i: [] for i in range(len(shards))}
+    for si, ri in survivors.values():
+        per_shard[si].append(ri)
+    return {
+        i: np.sort(np.asarray(rows, dtype=np.int64))
+        for i, rows in per_shard.items()
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -665,6 +738,7 @@ def _run_project_step(
     step_fps: dict[str, str] | None,
     digest: str | None,
     result: ShardResult,
+    backend: str = "loops",
 ) -> None:
     """Run one Project step's compiled expressions over flat buffers, one
     cache lookup per output column. A hit replaces the expression with a
@@ -689,7 +763,7 @@ def _run_project_step(
                 flat[out_col] = hit
                 result.cache_hits += 1
                 continue
-        out = E.eval_str(comp, lookup, n)
+        out = E.eval_str(comp, lookup, n, backend)
         flat[out_col] = out
         if key:
             # Uncacheable columns (key None) count neither hit nor miss:
@@ -870,7 +944,7 @@ def execute_program(
                     )
             take_rows(keep)
         elif kind == "filter":
-            take_rows(E.eval_mask(arg, lookup, len(frame)))
+            take_rows(E.eval_mask(arg, lookup, len(frame), program.backend))
         elif kind == "dedup":
             if dedups is None:
                 raise UnsupportedPlanError(
@@ -921,7 +995,8 @@ def execute_program(
         elif kind == "project":
             step_fps = col_fps.get(step_idx) if col_fps is not None else None
             _run_project_step(
-                len(frame), flat, lookup, arg, cache, step_fps, digest, result
+                len(frame), flat, lookup, arg, cache, step_fps, digest, result,
+                program.backend,
             )
         dt = time.perf_counter() - t0
         if kind == "project":

@@ -671,39 +671,55 @@ def compiled_signature(comp: tuple) -> bytes:
 # ---------------------------------------------------------------------------
 
 
-def eval_str(comp: tuple, lookup: Callable[[str], np.ndarray], n_rows: int) -> np.ndarray:
+def eval_str(
+    comp: tuple,
+    lookup: Callable[[str], np.ndarray],
+    n_rows: int,
+    backend: str | None = None,
+) -> np.ndarray:
     """Evaluate a compiled string expression to a flat byte buffer.
-    ``lookup(col)`` returns the current flat buffer of a column."""
+    ``lookup(col)`` returns the current flat buffer of a column.
+    ``backend`` selects the bytesops execution backend for op chains
+    (byte-identical across backends; see ``bytesops.execute_ops``)."""
     kind = comp[0]
     if kind == "chain":
-        return B.apply_ops(lookup(comp[1]), list(comp[2]))
+        return B.execute_ops(lookup(comp[1]), comp[2], backend)
     if kind == "lit":
         return B.flatten([comp[1]] * n_rows)
     if kind == "wrap":
-        return B.apply_ops(eval_str(comp[1], lookup, n_rows), list(comp[2]))
+        return B.execute_ops(eval_str(comp[1], lookup, n_rows, backend), comp[2], backend)
     if kind == "concat":
-        parts = [eval_str(c, lookup, n_rows) for c in comp[2]]
+        parts = [eval_str(c, lookup, n_rows, backend) for c in comp[2]]
         return B.concat_rows(parts, comp[1])
     raise ValueError(f"unknown compiled form {kind!r}")
 
 
-def eval_mask(comp: tuple, lookup: Callable[[str], np.ndarray], n_rows: int) -> np.ndarray:
+def eval_mask(
+    comp: tuple,
+    lookup: Callable[[str], np.ndarray],
+    n_rows: int,
+    backend: str | None = None,
+) -> np.ndarray:
     """Evaluate a compiled predicate to a boolean row mask — straight off
     flat byte buffers, no row ever decodes."""
     kind = comp[0]
     if kind == "nonempty":
-        return B.row_nonempty(eval_str(comp[1], lookup, n_rows))
+        return B.row_nonempty(eval_str(comp[1], lookup, n_rows, backend))
     if kind == "contains":
-        return B.rows_containing(eval_str(comp[2], lookup, n_rows), comp[1])
+        return B.rows_containing(eval_str(comp[2], lookup, n_rows, backend), comp[1])
     if kind == "wc":
-        counts = B.row_word_counts(eval_str(comp[3], lookup, n_rows))
+        counts = B.row_word_counts(eval_str(comp[3], lookup, n_rows, backend))
         return _CMP_FNS[comp[1]](counts, comp[2])
     if kind == "and":
-        return eval_mask(comp[1], lookup, n_rows) & eval_mask(comp[2], lookup, n_rows)
+        return eval_mask(comp[1], lookup, n_rows, backend) & eval_mask(
+            comp[2], lookup, n_rows, backend
+        )
     if kind == "or":
-        return eval_mask(comp[1], lookup, n_rows) | eval_mask(comp[2], lookup, n_rows)
+        return eval_mask(comp[1], lookup, n_rows, backend) | eval_mask(
+            comp[2], lookup, n_rows, backend
+        )
     if kind == "not":
-        return ~eval_mask(comp[1], lookup, n_rows)
+        return ~eval_mask(comp[1], lookup, n_rows, backend)
     raise ValueError(f"unknown compiled form {kind!r}")
 
 

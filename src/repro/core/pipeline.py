@@ -68,8 +68,12 @@ def _split_on_rows(buf: np.ndarray, k: int) -> list[np.ndarray]:
 
 
 def _run_ops(args) -> np.ndarray:
-    ops, buf = args
-    return B.apply_ops(buf, ops)
+    """Pool task: ``(ops, buf)`` or ``(ops, buf, backend)``; a missing or
+    None backend resolves from ``REPRO_BYTES_BACKEND`` inside the worker
+    (the pool inherits the env, so whole-frame runs honor it too)."""
+    ops, buf = args[0], args[1]
+    backend = args[2] if len(args) > 2 else None
+    return B.execute_ops(buf, ops, backend)
 
 
 def compile_column_plans(

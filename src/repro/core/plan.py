@@ -588,7 +588,10 @@ def plan_fingerprint(
 
 
 def explain(
-    nodes: Sequence[PlanNode], final_schema: Sequence[str] = (), optimize: bool = True
+    nodes: Sequence[PlanNode],
+    final_schema: Sequence[str] = (),
+    optimize: bool = True,
+    backend: str | None = None,
 ) -> str:
     lines = ["== logical plan =="]
     lines += [f"  {i}: {n.describe()}" for i, n in enumerate(nodes)]
@@ -596,6 +599,10 @@ def explain(
         opt = optimize_plan(nodes, final_schema)
         lines.append("== optimized plan ==")
         lines += [f"  {i}: {n.describe()}" for i, n in enumerate(opt)]
+    # Plan-level (explicit) backend choice only: the env var applies at
+    # execution time and must not make explain() output non-deterministic.
+    lines.append("== physical ==")
+    lines.append(f"  bytes backend: {backend or 'loops'}")
     return "\n".join(lines)
 
 
@@ -608,6 +615,7 @@ def run_project_frame(
     frame: ColumnarFrame,
     compiled: Sequence[tuple[str, tuple]],
     workers: int = 1,
+    backend: str | None = None,
 ) -> ColumnarFrame:
     """Whole-frame Project executor: flatten each input column once, run
     the compiled expression, unflatten once. Pure op chains optionally fan
@@ -638,10 +646,12 @@ def run_project_frame(
             elif pool is not None and comp[0] == "chain":
                 src = lookup(comp[1])
                 chunks = _split_on_rows(src, workers)
-                parts = list(pool.map(_run_ops, [(list(comp[2]), c) for c in chunks]))
+                parts = list(
+                    pool.map(_run_ops, [(list(comp[2]), c, backend) for c in chunks])
+                )
                 buf = np.concatenate(parts) if parts else src
             else:
-                buf = E.eval_str(comp, lookup, len(frame))
+                buf = E.eval_str(comp, lookup, len(frame), backend)
             flat[out_col] = buf
             out = out.ensure_column(out_col).with_flat(out_col, buf)
     finally:
@@ -651,7 +661,11 @@ def run_project_frame(
 
 
 def _exec_frame_node(
-    node: PlanNode, frame: ColumnarFrame | None, workers: int, optimize: bool
+    node: PlanNode,
+    frame: ColumnarFrame | None,
+    workers: int,
+    optimize: bool,
+    backend: str | None = None,
 ) -> ColumnarFrame:
     if isinstance(node, SourceJsonDirs):
         return ing.ingest(node.directories, node.fields, workers=workers)
@@ -666,7 +680,7 @@ def _exec_frame_node(
         return frame.drop_duplicates(list(node.subset))
     if isinstance(node, Project):
         compiled = E.compile_project(node.exprs, optimize)
-        return run_project_frame(frame, compiled, workers=workers)
+        return run_project_frame(frame, compiled, workers=workers, backend=backend)
     if isinstance(node, Filter):
         comp = E.compile_pred(node.pred)
         if optimize:
@@ -678,7 +692,7 @@ def _exec_frame_node(
                 memo[c] = frame.flat(c)
             return memo[c]
 
-        keep = E.eval_mask(comp, lk, len(frame))
+        keep = E.eval_mask(comp, lk, len(frame), backend)
         return frame if keep.all() else frame.take(keep)
     if isinstance(node, Split):
         train, val = split_indices(len(frame), node.fraction, node.seed)
@@ -692,6 +706,7 @@ def execute_frame_plan(
     workers: int = 1,
     optimize: bool = True,
     final_schema: Sequence[str] = (),
+    backend: str | None = None,
 ) -> tuple[ColumnarFrame, StageTimings]:
     """Run the frame-level plan whole-frame, attributing wall time to the
     paper's phases: source → ingestion, filters before the first stage chain
@@ -706,7 +721,12 @@ def execute_frame_plan(
     if optimize:
         frame_nodes = optimize_plan(frame_nodes, final_schema)
     return continue_frame_plan(
-        None, StageTimings(), frame_nodes, workers=workers, optimize=optimize
+        None,
+        StageTimings(),
+        frame_nodes,
+        workers=workers,
+        optimize=optimize,
+        backend=backend,
     )
 
 
@@ -718,6 +738,7 @@ def continue_frame_plan(
     workers: int = 1,
     optimize: bool = True,
     seen_cleaning: bool = False,
+    backend: str | None = None,
 ) -> tuple[ColumnarFrame, StageTimings]:
     """Run ``nodes`` starting from an already-materialized ``frame`` (or from
     scratch when ``frame`` is None), accumulating onto a copy of ``timings``.
@@ -732,7 +753,7 @@ def continue_frame_plan(
     )
     for node in nodes:
         t0 = time.perf_counter()
-        frame = _exec_frame_node(node, frame, workers, optimize)
+        frame = _exec_frame_node(node, frame, workers, optimize, backend)
         dt = time.perf_counter() - t0
         if isinstance(node, (SourceJsonDirs, SourceFrame)):
             t.ingestion += dt
@@ -864,6 +885,7 @@ def stream_batches(
     cache_dir: str | Path | None = None,
     stats: dict | None = None,
     remote: Any = None,
+    backend: str | None = None,
 ) -> Iterator[dict[str, np.ndarray]]:
     """Per-shard streaming execution: parse → filter → clean each shard
     inside a shard executor (reader threads or worker processes, see
@@ -873,11 +895,14 @@ def stream_batches(
     Preprocessing of shard k+1 overlaps consumption of shard k, so when the
     resulting iterator feeds an AsyncLoader the host pipeline runs fully
     concurrent with device compute. Records match whole-frame execution as a
-    multiset (shard arrival order is nondeterministic under work stealing);
-    that guarantee requires dedup over *all* live columns — duplicates are
-    then interchangeable rows — so partial-subset drop_duplicates is
-    rejected here (whichever shard won the race would decide which variant
-    survives).
+    multiset (shard arrival order is nondeterministic under work stealing).
+    Full-subset dedup keeps that guarantee directly — duplicate rows are
+    interchangeable. A *partial*-subset drop_duplicates (where the variant
+    that survives matters) streams via the two-pass canonical-survivor
+    protocol instead: an election pass picks each key's whole-frame
+    keep-first row, then every epoch runs the pure per-shard ``dedup_take``
+    program (see :func:`repro.core.executor.split_dedup_programs`). Only a
+    partial dedup *stacked with another dedup* is rejected.
 
     ``cache_dir`` enables the plan-fingerprint shard cache; ``executor``
     forces ``"thread"``/``"process"``/``"remote"`` (default: env
@@ -903,13 +928,16 @@ def stream_batches(
     if tok is None or batch is None:
         raise ValueError("streaming needs .tokenize(...) and .batch(...) in the plan")
 
-    for node in frame_nodes[1:]:
-        if isinstance(node, DropDuplicates) and not set(node.subset) >= set(src.fields):
-            raise ValueError(
-                f"streaming drop_duplicates({list(node.subset)}) is "
-                f"scheduling-dependent with partial subsets (source columns "
-                f"{list(src.fields)}); drop .prefetch() for whole-frame execution"
-            )
+    dedups = [n for n in frame_nodes[1:] if isinstance(n, DropDuplicates)]
+    partial = [d for d in dedups if not set(d.subset) >= set(src.fields)]
+    if partial and len(dedups) > 1:
+        # The election pass for one partial dedup would itself run under
+        # the scheduling-dependent cross-shard state of the other.
+        raise ValueError(
+            f"streaming drop_duplicates({list(partial[0].subset)}) with "
+            f"partial subsets cannot stack with another drop_duplicates; "
+            f"drop .prefetch() for whole-frame execution"
+        )
 
     shards = ing.list_shards(src.directories)
     # Compile the per-shard program once — token encoding included, so the
@@ -921,9 +949,38 @@ def stream_batches(
         stoi=dict(tok.tokenizer.stoi),
         vocab_fp=tok.tokenizer.fingerprint,
     )
-    program = EX.compile_shard_program(
-        frame_nodes, optimize=optimize, output_columns=spec_cols, tokens=token_plan
-    )
+    row_filters = None
+    if partial:
+        # Two-pass canonical-survivor protocol (shared with fit_vocab):
+        # elect the whole-frame keep-first survivor rows once, then every
+        # epoch streams the pure per-shard dedup_take program — identical
+        # multiset to whole-frame execution on any executor.
+        pass1, program = EX.split_dedup_programs(
+            frame_nodes,
+            optimize=optimize,
+            output_columns=spec_cols,
+            tokens=token_plan,
+            backend=backend,
+        )
+        row_filters = EX.elect_survivors(
+            shards,
+            pass1,
+            dict(
+                workers=max(workers, 1),
+                cache_dir=cache_dir,
+                executor=executor,
+                remote=remote,
+            ),
+            stats,
+        )
+    else:
+        program = EX.compile_shard_program(
+            frame_nodes,
+            optimize=optimize,
+            output_columns=spec_cols,
+            tokens=token_plan,
+            backend=backend,
+        )
 
     epoch = 0
     while epochs is None or epoch < epochs:
@@ -934,6 +991,7 @@ def stream_batches(
             cache_dir=cache_dir,
             executor=executor,
             remote=remote,
+            row_filters=row_filters,
         )
 
         def chunks() -> Iterator[dict[str, np.ndarray]]:

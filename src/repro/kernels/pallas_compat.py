@@ -28,3 +28,14 @@ def tpu_compiler_params(**kwargs):
         return _PARAMS_CLS(**kwargs)
     except TypeError:  # pragma: no cover - field renamed/removed upstream
         return None
+
+
+def has_tpu() -> bool:
+    """True when a TPU backend is attached — the capability check deciding
+    whether kernels run compiled (``interpret=False``) or must interpret."""
+    import jax
+
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except Exception:  # pragma: no cover - backend init failure == no TPU
+        return False

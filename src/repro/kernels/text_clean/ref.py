@@ -20,3 +20,31 @@ def text_clean_ref(rows: jax.Array, *, strip_html: bool = True) -> jax.Array:
         keep = (depth == 0) & (x != 62)
     is_word = (x >= 97) & (x <= 122)
     return jnp.where(is_word & keep, x, SPACE).astype(jnp.uint8)
+
+
+def text_scan_ref(
+    rows: jax.Array,
+    *,
+    lower: bool = True,
+    strip_html: bool = False,
+    strip_parens: bool = False,
+) -> jax.Array:
+    """Oracle for the scan-pass kernel (``text_scan``): value-preserving,
+    sentinel-0 for removed span bytes, ``depth <= 0`` survival, paren span
+    masked by the HTML span's aliveness."""
+    x = rows.astype(jnp.int32)
+    if lower:
+        upper = (x >= 65) & (x <= 90)
+        x = jnp.where(upper, x + 32, x)
+    alive = jnp.ones_like(x, dtype=bool)
+    if strip_html:
+        lt = (x == 60).astype(jnp.int32)
+        gt = (x == 62).astype(jnp.int32)
+        depth = jnp.cumsum(lt - gt, axis=1)
+        alive = (depth <= 0) & (x != 62)
+    if strip_parens:
+        opens = (x == 40) & alive
+        closes = (x == 41) & alive
+        depth2 = jnp.cumsum(opens.astype(jnp.int32) - closes.astype(jnp.int32), axis=1)
+        alive &= (depth2 <= 0) & ~closes
+    return jnp.where(alive, x, 0).astype(jnp.uint8)

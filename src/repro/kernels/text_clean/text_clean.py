@@ -72,3 +72,60 @@ def text_clean(
         ),
         interpret=interpret,
     )(rows)
+
+
+def _scan_kernel(x_ref, o_ref, *, lower: bool, strip_html: bool, strip_parens: bool):
+    """Megapass scan-pass kernel: the byte-exact device form of the fused
+    backend's LUT/SPAN sweep (``bytesops._run_scan``).
+
+    Unlike ``_clean_kernel`` this does NOT space-mask non-letters — later
+    chain stages (contraction REPLACE) need the original punctuation — and
+    removed span bytes become sentinel ``\\x00`` rather than space, so the
+    host can delete them and land on exactly the loops-backend bytes.
+    Survival uses ``depth <= 0`` (not ``== 0``): a stray ``>`` drives the
+    depth negative and ``span_strip`` keeps the bytes that follow it.
+    The paren span masks its opens/closes/deltas with the HTML span's
+    aliveness, which makes the two parallel depth scans sequential-exact."""
+    x = x_ref[...].astype(jnp.int32)  # (blk_r, width)
+    if lower:
+        upper = (x >= 65) & (x <= 90)
+        x = jnp.where(upper, x + 32, x)
+    alive = jnp.ones_like(x, dtype=jnp.bool_)
+    if strip_html:
+        lt = (x == 60).astype(jnp.int32)  # '<'
+        gt = (x == 62).astype(jnp.int32)  # '>'
+        depth = jnp.cumsum(lt - gt, axis=1)
+        alive = (depth <= 0) & (x != 62)
+    if strip_parens:
+        opens = (x == 40) & alive  # '('
+        closes = (x == 41) & alive  # ')'
+        depth2 = jnp.cumsum(opens.astype(jnp.int32) - closes.astype(jnp.int32), axis=1)
+        alive &= (depth2 <= 0) & ~closes
+    o_ref[...] = jnp.where(alive, x, 0).astype(jnp.uint8)
+
+
+def text_scan(
+    rows: jax.Array,  # (n_rows, width) uint8, space padded
+    *,
+    lower: bool = True,
+    strip_html: bool = False,
+    strip_parens: bool = False,
+    blk_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    n, width = rows.shape
+    blk_rows = min(blk_rows, n)
+    kernel = functools.partial(
+        _scan_kernel, lower=lower, strip_html=strip_html, strip_parens=strip_parens
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(n, blk_rows),),
+        in_specs=[pl.BlockSpec((blk_rows, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk_rows, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, width), jnp.uint8),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(rows)

@@ -8,7 +8,40 @@ dry-run sees 512 placeholder host devices).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.4.38; older versions predate explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def shard_map(fn, **kwargs):
+    """Version-portable ``shard_map``: top-level ``jax.shard_map`` (jax >=
+    0.6, replication check spelled ``check_vma``) or the experimental home
+    (``check_rep``) on older versions."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(fn, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.sharding.set_mesh`` where it exists; on older jax the mesh object
+    itself is the context manager."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,7 +50,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     data-parallel dimension whose collectives cross the inter-pod links."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -26,5 +59,5 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **_axis_kwargs(2),
     )

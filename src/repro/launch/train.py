@@ -29,7 +29,7 @@ from ..models.lm import LM, MeshContext
 from ..optim.adamw import AdamW, warmup_cosine
 from ..runtime.fault_tolerance import TrainController
 from ..runtime.train_loop import TrainStepConfig, make_train_step
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_host_mesh, make_production_mesh, set_mesh
 
 
 def build_dataset(cfg, seq_len: int, corpus_mb: float, seed: int) -> np.ndarray:
@@ -95,7 +95,7 @@ def main() -> None:
     opt = AdamW(learning_rate=warmup_cosine(args.lr, 10, args.steps))
     step = make_train_step(model.loss, opt, TrainStepConfig(args.microbatches))
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         shardings = tree_shardings(shapes, model.param_axes(), mesh, DEFAULT_RULES)
 

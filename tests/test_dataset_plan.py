@@ -248,19 +248,51 @@ def test_streaming_matches_wholeframe(corpus):
     assert row_set(streamed) == row_set(whole)
 
 
-def test_streaming_rejects_partial_subset_dedup(corpus):
-    # partial-subset dedup survivors depend on shard arrival order; the
-    # streaming executor must refuse rather than return racy results
+def test_streaming_partial_subset_dedup_matches_wholeframe(corpus):
+    # partial-subset dedup streams via the two-pass canonical-survivor
+    # protocol: the streamed rows must equal whole-frame execution as a
+    # multiset (the election pins each key's whole-frame keep-first row)
+    tok_records, _ = run_p3sapp([corpus], optimize=True)
+    tok = WordTokenizer.fit((r["abstract"] for r in tok_records), vocab_size=256)
+
+    def chain():
+        return (
+            Dataset.from_json_dirs([corpus])
+            .dropna()
+            .drop_duplicates(["title"])  # partial subset
+            .apply(*case_study_stages())
+            .dropna()
+            .tokenize(tok, seq2seq_specs(32, 8))
+            .batch(8, shuffle=False, drop_remainder=False)
+        )
+
+    whole = list(chain().iter_batches())
+    streamed = list(chain().prefetch(2).iter_batches(workers=3))
+
+    def row_set(batches):
+        return sorted(
+            (b["encoder_tokens"][i].tobytes(), b["decoder_tokens"][i].tobytes())
+            for b in batches
+            for i in range(len(b["encoder_tokens"]))
+        )
+
+    assert row_set(streamed) == row_set(whole)
+
+
+def test_streaming_rejects_stacked_partial_dedup(corpus):
+    # a partial-subset dedup stacked with another dedup: the election pass
+    # itself would run under scheduling-dependent cross-shard state
     tok = WordTokenizer(["w"])
     ds = (
         Dataset.from_json_dirs([corpus])
         .drop_duplicates(["title"])
+        .drop_duplicates()
         .apply(*case_study_stages())
         .tokenize(tok, seq2seq_specs(16, 4))
         .batch(4, shuffle=False)
         .prefetch(2)
     )
-    with pytest.raises(ValueError, match="scheduling-dependent"):
+    with pytest.raises(ValueError, match="cannot stack"):
         next(ds.iter_batches())
 
 

@@ -72,7 +72,7 @@ def test_pjit_forward_matches_single_device():
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke
 from repro.models.lm import LM, MeshContext
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 
 cfg = get_smoke("stablelm_3b")
 mesh = make_host_mesh(model_parallel=2)
@@ -84,7 +84,7 @@ toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 4, cfg.vocab_size)
 ref_model = LM(cfg, remat=False, dtype=jnp.float32)
 ref_logits, _ = ref_model.forward(params, {"tokens": toks})
 
-with jax.sharding.set_mesh(mesh):
+with set_mesh(mesh):
     sh = NamedSharding(mesh, P("data", None))
     toks_d = jax.device_put(toks, sh)
     logits, _ = jax.jit(model.forward)(params, {"tokens": toks_d})
@@ -99,7 +99,7 @@ def test_moe_ep_matches_local():
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke
 from repro.models import moe as MOE
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 
 cfg = get_smoke("deepseek_moe_16b")
 # capacity high enough that nothing drops (so EP == local exactly)
@@ -109,7 +109,7 @@ p = MOE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)) * 0.5
 
 y_local, aux_local = MOE.moe_local(p, x, cfg)
-with jax.sharding.set_mesh(mesh):
+with set_mesh(mesh):
     xd = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
     y_ep, aux_ep = jax.jit(lambda p, x: MOE.moe_ep(p, x, cfg, mesh, ("data",), "model"))(p, xd)
 np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_local), rtol=2e-4, atol=2e-4)
@@ -124,13 +124,13 @@ def test_psum_compressed_allreduce():
     run_sub(r"""
 from functools import partial
 from repro.optim.grad_compression import psum_compressed
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 mesh = make_host_mesh(model_parallel=1)
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 0.01
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None), check_vma=False)
 def reduce_fn(g_local):
     mean, err = psum_compressed({"g": g_local}, ("data",))
     return mean["g"] / 8.0
@@ -167,7 +167,7 @@ def test_train_step_sharded_end_to_end():
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke
 from repro.models.lm import LM, MeshContext
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.optim.adamw import AdamW
 from repro.runtime.train_loop import TrainStepConfig, make_train_step
 from repro.distributed.sharding import tree_shardings
@@ -180,7 +180,7 @@ params = model.init(jax.random.PRNGKey(0))
 opt = AdamW(learning_rate=1e-3)
 step = make_train_step(model.loss, opt, TrainStepConfig(n_microbatches=2))
 
-with jax.sharding.set_mesh(mesh):
+with set_mesh(mesh):
     sh = tree_shardings(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
                         model.param_axes(), mesh)
     params = jax.tree.map(jax.device_put, params, sh)

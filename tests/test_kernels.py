@@ -211,6 +211,81 @@ def test_flash_attention_compiled_on_tpu():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)
 
 
+# ---------------------------------------------------------------------------
+# text_scan (the bytesops "pallas" backend kernel)
+# ---------------------------------------------------------------------------
+
+SCAN_ROWS = [
+    "Hello <b>World</b> 42!",
+    "plain text only",
+    "(paren) and <tag> together",
+    "<a(b>c)d adversarial nesting",
+    "(a(b<c)d>e stray ) closer",
+    "unclosed <span swallows",
+    ">> leading closers ((",
+    "",
+] * 3
+
+
+@pytest.mark.parametrize("flags", [
+    dict(lower=True, strip_html=True, strip_parens=True),
+    dict(lower=True, strip_html=True, strip_parens=False),
+    dict(lower=False, strip_html=False, strip_parens=True),
+    dict(lower=True, strip_html=False, strip_parens=False),
+])
+def test_text_scan_vs_ref(flags):
+    from repro.kernels.text_clean.ops import text_scan_op
+    from repro.kernels.text_clean.ref import text_scan_ref
+
+    mat = pack_rows(SCAN_ROWS)
+    out = text_scan_op(mat, blk_rows=8, interpret=True, **flags)
+    ref = text_scan_ref(mat, **flags)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@requires_tpu
+def test_text_scan_compiled_on_tpu():
+    from repro.kernels.text_clean.ops import text_scan_op
+    from repro.kernels.text_clean.ref import text_scan_ref
+
+    mat = pack_rows(SCAN_ROWS)
+    out = text_scan_op(mat, lower=True, strip_html=True, strip_parens=True,
+                       interpret=False)
+    ref = text_scan_ref(mat, lower=True, strip_html=True, strip_parens=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_scan_flat_matches_loops_ops(monkeypatch):
+    """The flat-buffer bridge (pad → kernel → compact) must be
+    byte-identical to the sequential loops ops it replaces — including
+    non-ASCII bytes and the adversarial nesting rows."""
+    from repro.core import bytesops as B
+    from repro.kernels.text_clean.ops import scan_flat
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    rows = SCAN_ROWS + ["naïve café 漢字 🙂 (ñé) <Ω>", "tab\there"]
+    buf = B.flatten(rows)
+    ops = [B.lut_op(B.LOWER_LUT), B.span_op("<", ">"), B.span_op("(", ")")]
+    want = B.apply_ops(buf, ops)
+    got = scan_flat(buf, lower=True, strip_html=True, strip_parens=True)
+    assert got is not None, "bridge declined despite REPRO_PALLAS_INTERPRET"
+    np.testing.assert_array_equal(got, want)
+
+
+def test_scan_flat_declines_safely(monkeypatch):
+    """Without a TPU or the interpret override the bridge must decline
+    (return None) rather than run the interpreter in production."""
+    from repro.core import bytesops as B
+    from repro.kernels.pallas_compat import has_tpu
+    from repro.kernels.text_clean.ops import scan_flat
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    buf = B.flatten(["some text <b>here</b>"])
+    out = scan_flat(buf, lower=True, strip_html=True)
+    if not has_tpu():
+        assert out is None
+
+
 def test_text_clean_matches_host_stages():
     """Device kernel == host ConvertToLower+RemoveHTMLTags+char-class LUT."""
     from repro.core import bytesops as B

@@ -3,8 +3,9 @@ pushdown, and the two-pass dedup program split.
 
 The differential harness (:mod:`tests.test_executor_equivalence`) proves
 the rewrites are byte-exact; these tests prove they actually *eliminate*
-work — an evaluation-count probe wraps ``bytesops.apply_ops`` and asserts
-the shared chain runs once per frame/shard — and pin the unit-level
+work — an evaluation-count probe wraps ``bytesops.execute_ops`` (the
+backend-independent chain entry point) and asserts the shared chain runs
+once per frame/shard — and pin the unit-level
 contracts (conjunct flattening, survivor-program compilation, dedup_take
 guard rails).
 """
@@ -41,16 +42,18 @@ def write_shards(root, records, n_files=3):
 
 @pytest.fixture
 def op_chain_counter(monkeypatch):
-    """Count non-trivial ``apply_ops`` invocations (the unit CSE saves)."""
+    """Count non-trivial ``execute_ops`` invocations (the unit CSE saves).
+    ``execute_ops`` is the one entry point every backend dispatches
+    through, so the counts hold under REPRO_BYTES_BACKEND overrides."""
     calls = []
-    real = B.apply_ops
+    real = B.execute_ops
 
-    def counting(buf, ops):
+    def counting(buf, ops, backend=None):
         if ops:
             calls.append(len(ops))
-        return real(buf, ops)
+        return real(buf, ops, backend)
 
-    monkeypatch.setattr(B, "apply_ops", counting)
+    monkeypatch.setattr(B, "execute_ops", counting)
     return calls
 
 
@@ -69,7 +72,7 @@ def test_cse_whole_frame_evaluates_shared_chain_once(tmp_path, op_chain_counter)
     d = write_shards(tmp_path, RECORDS)
     # workers=1 keeps evaluation in-process so the probe sees every call.
     frame = shared_chain_ds(d).collect(workers=1)
-    # One apply_ops for the hoisted chain; the filter reads the memoized
+    # One chain execution for the hoisted chain; the filter reads the memoized
     # buffer and the projected column is a zero-op alias.
     assert len(op_chain_counter) == 1, op_chain_counter
     assert frame.field_names == ["title", "abstract"]  # no __cse_* leak
