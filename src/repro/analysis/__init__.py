@@ -1,0 +1,45 @@
+"""Static analysis: plan diagnostics + repo contract linting.
+
+Two halves:
+
+* **Plan analyzer** (:mod:`plan_analyzer`, :mod:`expr_check`,
+  :mod:`rewrites`) — typed schema inference, expression type checking,
+  streaming-shape checks, and static verification of every optimizer
+  rewrite. Surfaced as ``Dataset.validate()`` and auto-run at the head
+  of every terminal, so an invalid plan fails with coded,
+  provenance-bearing :class:`Diagnostic`\\ s before any executor thread,
+  worker process, or remote coordinator starts.
+* **Contract linter** (:mod:`contracts`, ``python -m repro.analysis``)
+  — AST/import-graph rules for the repo's structural invariants (the
+  jax-free worker tier, fork-safe byte paths, atomic cache/heartbeat
+  writes, no bare excepts in the runtime).
+
+This ``__init__`` stays stdlib-only: the contracts CLI runs in CI's lint
+job with no numpy/jax installed, so the plan-analysis names (which pull
+in :mod:`repro.core`) resolve lazily via PEP 562.
+"""
+
+from .diagnostics import Diagnostic, PlanValidationError, node_ref
+
+_LAZY = {
+    "analyze_plan": "plan_analyzer",
+    "infer_schema": "plan_analyzer",
+    "check_streaming_plan": "plan_analyzer",
+    "check_transform": "expr_check",
+    "check_predicate": "expr_check",
+    "verify_plan_rewrites": "rewrites",
+    "verify_rewrite_pair": "rewrites",
+    "lint_contracts": "contracts",
+    "build_import_graph": "contracts",
+}
+
+__all__ = ["Diagnostic", "PlanValidationError", "node_ref", *_LAZY]
+
+
+def __getattr__(name: str):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module("." + submodule, __name__), name)

@@ -301,6 +301,10 @@ class Dataset:
         from . import ingest as ing
 
         owner = self._frame_prefix_dataset()
+        # Validate the frame prefix before any executor spawns. Never with
+        # the streaming shape checks: fit_vocab falls back to the exact
+        # whole-frame count for plans that cannot stream (see _counts_mode).
+        owner._require_valid(streaming=False, optimize=optimize)
         cols = tuple(columns) if columns is not None else owner.schema
         unknown = [c for c in cols if c not in owner.schema]
         if unknown:
@@ -551,6 +555,47 @@ class Dataset:
         return default
 
     # -- plan inspection ---------------------------------------------------
+    def validate(
+        self, *, streaming: bool | None = None, optimize: bool = True
+    ) -> list:
+        """Statically analyze this plan; returns every
+        :class:`repro.analysis.Diagnostic` (empty list = clean).
+
+        Runs typed schema inference and expression type checking over the
+        node list, the streaming shape checks when this chain would stream
+        (or when ``streaming=True`` forces them), and — with ``optimize``
+        — static verification of every optimizer rewrite. Every terminal
+        calls this first, so an invalid plan raises a coded,
+        provenance-bearing :class:`repro.analysis.PlanValidationError`
+        before any executor thread, worker process, or remote coordinator
+        starts."""
+        from ..analysis import analyze_plan
+
+        if streaming is None:
+            streaming = self._streaming()
+        return analyze_plan(
+            self._nodes,
+            final_schema=self._needed_columns(),
+            streaming=streaming,
+            optimize=optimize,
+        )
+
+    def _require_valid(
+        self, *, streaming: bool | None = None, optimize: bool = True
+    ) -> None:
+        """Raise :class:`repro.analysis.PlanValidationError` on any
+        error-severity diagnostic (warnings — e.g. an unfingerprintable
+        lambda op — never block execution)."""
+        from ..analysis import PlanValidationError
+
+        errors = [
+            d
+            for d in self.validate(streaming=streaming, optimize=optimize)
+            if d.severity == "error"
+        ]
+        if errors:
+            raise PlanValidationError(errors)
+
     @property
     def plan(self) -> tuple[P.PlanNode, ...]:
         return self._nodes
@@ -569,7 +614,16 @@ class Dataset:
         """Nearest ancestor whose plan is entirely frame-level."""
         ds: Dataset = self
         while ds._nodes and not P.is_frame_node(ds._nodes[-1]):
-            assert ds._parent is not None
+            if ds._parent is None:
+                # Hand-built Dataset (constructed from raw nodes, no
+                # builder ancestry): synthesize the frame prefix so
+                # validation and terminals still resolve a frame schema.
+                prefix = []
+                for n in ds._nodes:
+                    if not P.is_frame_node(n):
+                        break
+                    prefix.append(n)
+                return Dataset(prefix, ds.schema, options=ds._options)
             ds = ds._parent
         return ds
 
@@ -694,6 +748,7 @@ class Dataset:
         """Materialize the frame (plan must be frame-level only)."""
         if self._array_nodes():
             raise ValueError("collect() on a tokenized plan; use arrays()/iter_batches()")
+        self._require_valid(streaming=False, optimize=optimize)
         return self._materialize(
             self._resolve_workers(workers), optimize, exact=workers is not None
         )[0]
@@ -706,6 +761,7 @@ class Dataset:
             raise ValueError(
                 "execute()/to_records() on a tokenized plan; use arrays()/iter_batches()"
             )
+        self._require_valid(streaming=False, optimize=optimize)
         frame, t = self._materialize(
             self._resolve_workers(workers), optimize, exact=workers is not None
         )
@@ -726,6 +782,7 @@ class Dataset:
         self, *, workers: int | None = None, optimize: bool = True
     ) -> dict[str, np.ndarray]:
         """Materialize tokenized model-input arrays whole-frame."""
+        self._require_valid(streaming=False, optimize=optimize)
         frame, _ = self._materialize(
             self._resolve_workers(workers), optimize, exact=workers is not None
         )
@@ -748,10 +805,16 @@ class Dataset:
         ``REPRO_WORKERS`` > default (2 for streaming, 1 whole-frame);
         likewise ``executor`` falls back to ``.workers(executor=...)`` then
         ``REPRO_EXECUTOR``. ``stats`` (a dict) receives executor/cache
-        counters after each streamed epoch."""
+        counters after each streamed epoch.
+
+        The plan is validated eagerly — at this call, not at the first
+        ``next()`` — so an invalid plan raises a diagnostic-bearing
+        :class:`repro.analysis.PlanValidationError` before any executor
+        thread, worker process, or remote coordinator starts."""
+        self._require_valid(optimize=optimize)
         batch = self._batch_node()
         if self._streaming():
-            yield from P.stream_batches(
+            return P.stream_batches(
                 self._nodes,
                 workers=self._resolve_workers(workers, default=2),
                 optimize=optimize,
@@ -764,7 +827,15 @@ class Dataset:
                 remote=self._options.get("remote"),
                 backend=self._resolve_backend(),
             )
-            return
+        return self._whole_frame_batches(batch, workers, optimize, epochs)
+
+    def _whole_frame_batches(
+        self,
+        batch: P.Batch,
+        workers: int | None,
+        optimize: bool,
+        epochs: int | None,
+    ) -> Iterator[dict[str, np.ndarray]]:
         arrays = self.arrays(workers=workers, optimize=optimize)
         epoch = 0
         while epochs is None or epoch < epochs:
@@ -804,6 +875,7 @@ class Dataset:
         snap onto the plan's fixed bucket grid, transfers double-buffer
         ahead of compute, and the feed's :class:`OverlapProfiler` accounts
         device-idle time per step."""
+        self._require_valid(optimize=optimize)
         node = next((n for n in self._nodes if isinstance(n, P.Prefetch)), None)
         depth = prefetch if prefetch is not None else (node.prefetch if node else 2)
         shard = sharding if sharding is not None else (node.sharding if node else None)

@@ -460,9 +460,28 @@ def split_dedup_programs(
         i for i, n in enumerate(frame_nodes) if isinstance(n, P.DropDuplicates)
     ]
     if len(idxs) != 1:
-        raise UnsupportedPlanError(
-            f"two-pass dedup requires exactly one DropDuplicates node, "
-            f"found {len(idxs)}"
+        # Build-time diagnostic (program compilation — nothing has spawned
+        # yet), naming each offending Dedup node. The plan analyzer
+        # (P005, repro.analysis) rejects this shape at validate time; this
+        # is the compile-time backstop for direct callers.
+        from ..analysis.diagnostics import (
+            Diagnostic,
+            PlanValidationError,
+            node_ref,
+        )
+
+        provenance = tuple(node_ref(i, frame_nodes[i]) for i in idxs)
+        raise PlanValidationError(
+            [
+                Diagnostic(
+                    "P005",
+                    f"two-pass dedup requires exactly one DropDuplicates "
+                    f"node, found {len(idxs)}: a partial-subset "
+                    "drop_duplicates cannot stack with another "
+                    "drop_duplicates in a per-shard program",
+                    provenance=provenance,
+                )
+            ]
         )
     j = idxs[0]
     subset = tuple(frame_nodes[j].subset)

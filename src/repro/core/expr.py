@@ -471,6 +471,16 @@ def map_pred_exprs(p: Pred, fn: Callable[[Expr], Expr]) -> Pred:
     raise TypeError(f"not a predicate: {p!r}")
 
 
+def walk_exprs(e: Expr):
+    """Yield every node of an expression tree, pre-order (root first)."""
+    yield e
+    if isinstance(e, StrOp):
+        yield from walk_exprs(e.input)
+    elif isinstance(e, Concat):
+        for p in e.parts:
+            yield from walk_exprs(p)
+
+
 def resolved_signature(
     e: Expr, versions: dict[str, bytes | None]
 ) -> bytes | None:

@@ -913,11 +913,27 @@ def stream_batches(
     ``executor``, ``cache_hits``, ``cache_misses`` and per-epoch ``timings``
     after each epoch completes.
     """
+    from ..analysis import PlanValidationError, check_streaming_plan
     from . import executor as EX
 
     frame_nodes, array_nodes = split_plan(nodes)
     if optimize:
         frame_nodes = optimize_plan(frame_nodes, final_schema)
+
+    # Static shape validation against the same (optimized) frame plan this
+    # function streams — every failure below surfaces here as a coded,
+    # provenance-bearing diagnostic before any shard executor spawns.
+    shape_errors = [
+        d
+        for d in check_streaming_plan(nodes, optimized_frame_nodes=frame_nodes)
+        if d.severity == "error"
+    ]
+    if shape_errors:
+        raise PlanValidationError(shape_errors)
+
+    # Backstop raises: unreachable via the public API (the analyzer above
+    # rejects these shapes first); kept so a bypassed or regressed analyzer
+    # still fails loudly instead of executing a malformed plan.
     src = frame_nodes[0]
     if not isinstance(src, SourceJsonDirs):
         raise ValueError("streaming execution requires a SourceJsonDirs plan")

@@ -24,8 +24,10 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Iterator
 
-
-from ..checkpoint.checkpointer import Checkpointer
+# NOTE: Checkpointer (and through it jax) is imported lazily inside
+# TrainController.__init__. The distributed preprocessing workers import
+# this module for Heartbeat, and the worker tier must stay jax-free at
+# module level (contract R001, enforced by `python -m repro.analysis`).
 
 
 class Heartbeat:
@@ -87,6 +89,8 @@ class TrainController:
         shardings: Any | None = None,
         heartbeat: Heartbeat | None = None,
     ):
+        from ..checkpoint.checkpointer import Checkpointer
+
         self.ckpt = Checkpointer(ckpt_dir, keep=keep)
         self.train_step = train_step
         self.save_every = save_every

@@ -180,7 +180,15 @@ CASES = {
 
 @pytest.mark.parametrize("name", sorted(CASES))
 def test_golden_plan(name):
-    got = CASES[name]().explain() + "\n"
+    ds = CASES[name]()
+    # Every committed golden plan must also be analyzer-clean: the static
+    # rewrite verifier re-checks the exact optimizer output these
+    # snapshots pin (warnings allowed, errors never).
+    errors = [d for d in ds.validate() if d.severity == "error"]
+    assert not errors, "analyzer rejected a golden plan:\n" + "\n".join(
+        d.render() for d in errors
+    )
+    got = ds.explain() + "\n"
     path = GOLDEN_DIR / f"{name}.txt"
     if os.environ.get("REPRO_UPDATE_GOLDENS"):
         GOLDEN_DIR.mkdir(parents=True, exist_ok=True)

@@ -233,14 +233,23 @@ def test_split_dedup_programs_shapes():
 
 
 def test_split_dedup_programs_rejects_multiple_dedups():
+    from repro.analysis import PlanValidationError
+
     ds = (
         Dataset.from_json_dirs(["/x"], FIELDS)
         .drop_duplicates(["title"])
         .drop_duplicates(["abstract"])
     )
     frame_nodes, _ = P.split_plan(ds.plan)
-    with pytest.raises(EX.UnsupportedPlanError):
+    # Stacked dedups now fail at program build time with a structured
+    # diagnostic naming both offending Dedup nodes.
+    with pytest.raises(PlanValidationError) as excinfo:
         EX.split_dedup_programs(frame_nodes, count_columns=FIELDS)
+    (diag,) = excinfo.value.diagnostics
+    assert diag.code == "P005"
+    assert len(diag.provenance) == 2
+    assert any("DropDuplicates(['title'])" in p for p in diag.provenance)
+    assert any("DropDuplicates(['abstract'])" in p for p in diag.provenance)
 
 
 def test_dedup_take_requires_row_filters(tmp_path):

@@ -1,0 +1,570 @@
+"""Invalid-plan corpus + static-analysis self-tests (PR 9).
+
+Three suites:
+
+* **Invalid-plan corpus** — every known way to build a broken plan, each
+  pinned to its diagnostic code and provenance. The companion
+  spawn-counting test proves each one fails from ``Dataset.validate()``
+  (auto-run at the head of every terminal) *before* any executor
+  thread, worker process, or remote coordinator is constructed.
+* **Rewrite-verifier unit tests** — :func:`verify_rewrite_pair` against
+  deliberately tampered "optimized" plans (dropped filter, lost column,
+  changed lineage, reordered dedup, broken scoping).
+* **Contract-linter self-tests** — seeded R0xx violations planted in a
+  tmp package tree, asserted caught; the real tree asserted clean; the
+  ``python -m repro.analysis`` CLI exit codes.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+import repro
+from repro.analysis import PlanValidationError
+from repro.analysis.contracts import lint_contracts
+from repro.analysis.rewrites import verify_rewrite_pair
+from repro.core import bytesops as B
+from repro.core import executor as EX
+from repro.core import expr as E
+from repro.core import plan as P
+from repro.core.dataset import Dataset
+from repro.core.expr import col
+from repro.data.batching import TokenSpec
+from repro.data.tokenizer import WordTokenizer
+
+FIELDS = ("title", "abstract")
+
+
+def _tok():
+    return WordTokenizer(["w"])
+
+
+def _spec(column="title", max_len=8, out=None):
+    return TokenSpec(column, max_len, out=out)
+
+
+# -- invalid-plan corpus ----------------------------------------------------
+#
+# name -> (builder, expected code, provenance fragment, terminal, validate kw)
+# ``terminal`` is how the plan would reach execution via the public API:
+#   "iter"    Dataset.iter_batches()
+#   "collect" Dataset.collect()
+#   "stream"  direct plan.stream_batches() (shapes .iter_batches() routes
+#             to whole-frame execution instead of streaming)
+
+
+def _p001_non_json_source():
+    return Dataset.from_records([{"title": "a", "abstract": "b"}], FIELDS)
+
+
+def _p002_split_in_stream():
+    train, _val = Dataset.from_json_dirs(["/x"], FIELDS).split(0.5)
+    return train
+
+
+def _p003_missing_tokenize():
+    return Dataset.from_json_dirs(["/x"], FIELDS).prefetch(2)
+
+
+def _p004_missing_batch():
+    return (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .tokenize(_tok(), (_spec(),))
+        .prefetch(2)
+    )
+
+
+def _p005_stacked_partial_dedup():
+    return (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .drop_duplicates(["title"])
+        .drop_duplicates(["abstract"])
+        .tokenize(_tok(), (_spec(),))
+        .batched(4)
+        .prefetch(2)
+    )
+
+
+def _p006_select_unknown_column():
+    # Hand-built: the Dataset builder verbs reject this at construction,
+    # but deserialized/hand-assembled plans reach validate() directly.
+    nodes = [P.SourceJsonDirs(("/x",), FIELDS), P.Select(("nope",))]
+    return Dataset(nodes, ("nope",))
+
+
+def _p007_frame_after_array():
+    nodes = [
+        P.SourceJsonDirs(("/x",), FIELDS),
+        P.Tokenize(_tok(), (_spec(),)),
+        P.DropNA(("title",)),
+    ]
+    return Dataset(nodes, FIELDS)
+
+
+def _p008_batch_without_tokenize():
+    nodes = [P.SourceJsonDirs(("/x",), FIELDS), P.Batch(4)]
+    return Dataset(nodes, FIELDS)
+
+
+def _p009_off_grid_buckets():
+    nodes = [
+        P.SourceJsonDirs(("/x",), FIELDS),
+        P.Tokenize(_tok(), (_spec(out="title_tokens"),)),
+        P.Batch(4, bucket_by="title_tokens", buckets=(8, 4)),
+    ]
+    return Dataset(nodes, FIELDS)
+
+
+def _p014_no_source():
+    return Dataset([P.Select(("title",))], ("title",))
+
+
+def _e001_predicate_in_transform_position():
+    nodes = [
+        P.SourceJsonDirs(("/x",), FIELDS),
+        P.Project((("flag", col("title").not_empty()),)),
+    ]
+    return Dataset(nodes, FIELDS)
+
+
+def _e002_expression_in_predicate_position():
+    nodes = [P.SourceJsonDirs(("/x",), FIELDS), P.Filter(col("title").lower())]
+    return Dataset(nodes, FIELDS)
+
+
+def _e003_regex_does_not_compile():
+    # The builder verbs compile regexes at construction; a hand-built op
+    # (deserialized plan) reaches the analyzer instead.
+    bad = E.StrOp(
+        col("title"), B.Op(kind="regex", regex=(b"(unclosed", b"x")), "bad_rx"
+    )
+    nodes = [P.SourceJsonDirs(("/x",), FIELDS), P.Project((("title", bad),))]
+    return Dataset(nodes, FIELDS)
+
+
+def _e005_expr_reads_unknown_column():
+    nodes = [
+        P.SourceJsonDirs(("/x",), FIELDS),
+        P.Project((("x", col("nope").lower()),)),
+    ]
+    return Dataset(nodes, FIELDS)
+
+
+CORPUS = {
+    "p001_non_json_source": (
+        _p001_non_json_source, "P001", "SourceFrame", "stream",
+        {"streaming": True},
+    ),
+    "p002_split_in_stream": (
+        _p002_split_in_stream, "P002", "Split", "stream", {"streaming": True},
+    ),
+    "p003_missing_tokenize": (
+        _p003_missing_tokenize, "P003", "Prefetch", "iter", {},
+    ),
+    "p004_missing_batch": (
+        _p004_missing_batch, "P004", "Prefetch", "iter", {},
+    ),
+    "p005_stacked_partial_dedup": (
+        _p005_stacked_partial_dedup, "P005", "DropDuplicates", "iter", {},
+    ),
+    "p006_select_unknown_column": (
+        _p006_select_unknown_column, "P006", "Select", "collect", {},
+    ),
+    "p007_frame_after_array": (
+        _p007_frame_after_array, "P007", "DropNA", "iter", {},
+    ),
+    "p008_batch_without_tokenize": (
+        _p008_batch_without_tokenize, "P008", "Batch", "iter", {},
+    ),
+    "p009_off_grid_buckets": (
+        _p009_off_grid_buckets, "P009", "Batch", "iter", {},
+    ),
+    "p014_no_source": (_p014_no_source, "P014", "Select", "collect", {}),
+    "e001_predicate_in_transform_position": (
+        _e001_predicate_in_transform_position, "E001", "Project", "collect", {},
+    ),
+    "e002_expression_in_predicate_position": (
+        _e002_expression_in_predicate_position, "E002", "Filter", "collect", {},
+    ),
+    "e003_regex_does_not_compile": (
+        _e003_regex_does_not_compile, "E003", "Project", "collect", {},
+    ),
+    "e005_expr_reads_unknown_column": (
+        _e005_expr_reads_unknown_column, "E005", "Project", "collect", {},
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CORPUS))
+def test_corpus_fixture_yields_coded_diagnostic(name):
+    build, code, prov_frag, _terminal, kwargs = CORPUS[name]
+    diags = build().validate(**kwargs)
+    hits = [d for d in diags if d.code == code]
+    assert hits, (
+        f"expected {code}, got "
+        f"{[(d.code, d.message) for d in diags] or 'a clean plan'}"
+    )
+    diag = hits[0]
+    assert diag.severity == "error"
+    assert diag.provenance, f"{code} diagnostic carries no provenance"
+    assert any(prov_frag in line for line in diag.provenance), (
+        f"no provenance line mentions {prov_frag!r}: {diag.provenance}"
+    )
+    # Provenance renders like explain() node listings: "node <i>: <describe>"
+    assert all(line.startswith("node ") for line in diag.provenance)
+
+
+class _SpawnCounter:
+    """Counts (and vetoes) every way execution machinery can start: the
+    physical-executor factory, the executor classes themselves, and the
+    whole-frame plan runners."""
+
+    def __init__(self, monkeypatch):
+        self.count = 0
+
+        def bump(*_a, **_k):
+            self.count += 1
+            raise AssertionError(
+                "executor/plan-runner spawned for an invalid plan"
+            )
+
+        monkeypatch.setattr(EX, "make_executor", bump)
+        monkeypatch.setattr(EX.ThreadShardExecutor, "__init__", bump)
+        monkeypatch.setattr(EX.ProcessShardExecutor, "__init__", bump)
+        monkeypatch.setattr(P, "execute_frame_plan", bump)
+        monkeypatch.setattr(P, "continue_frame_plan", bump)
+
+
+def _run_terminal(ds, terminal):
+    if terminal == "iter":
+        return ds.iter_batches()
+    if terminal == "collect":
+        return ds.collect()
+    if terminal == "stream":
+        return next(P.stream_batches(ds.plan, final_schema=ds.schema))
+    raise AssertionError(terminal)
+
+
+@pytest.mark.parametrize("name", sorted(CORPUS))
+def test_corpus_fails_before_any_executor_spawns(name, monkeypatch):
+    build, code, _frag, terminal, _kwargs = CORPUS[name]
+    ds = build()
+    counter = _SpawnCounter(monkeypatch)
+    with pytest.raises(PlanValidationError) as excinfo:
+        _run_terminal(ds, terminal)
+    assert any(d.code == code for d in excinfo.value.diagnostics)
+    assert counter.count == 0, (
+        f"{counter.count} executor(s) spawned before validation failed"
+    )
+
+
+def test_validation_error_renders_codes_and_provenance():
+    with pytest.raises(PlanValidationError) as excinfo:
+        _p005_stacked_partial_dedup().iter_batches()
+    text = str(excinfo.value)
+    assert "P005" in text
+    assert "at node " in text  # provenance lines render like explain()
+    # and the structured form is preserved for tools
+    (diag,) = excinfo.value.diagnostics
+    assert len(diag.provenance) == 2
+
+
+def test_fit_vocab_validates_frame_prefix(monkeypatch):
+    counter = _SpawnCounter(monkeypatch)
+    with pytest.raises(PlanValidationError) as excinfo:
+        _p006_select_unknown_column().fit_vocab(_tok())
+    assert any(d.code == "P006" for d in excinfo.value.diagnostics)
+    assert counter.count == 0
+
+
+def test_warning_diagnostics_do_not_block_execution():
+    """E004 (unfingerprintable lambda op) is a warning: validate() reports
+    it, _require_valid lets the plan run."""
+    lam = E.StrOp(
+        col("title"),
+        B.Op(kind="wordpred", pred=lambda _v, ln: ln > 2),
+        "lambda_pred",
+    )
+    nodes = [P.SourceJsonDirs(("/x",), FIELDS), P.Project((("title", lam),))]
+    ds = Dataset(nodes, FIELDS)
+    diags = ds.validate()
+    assert [(d.code, d.severity) for d in diags] == [("E004", "warning")]
+    ds._require_valid()  # must not raise
+
+
+def test_valid_plans_are_clean():
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .dropna()
+        .where(col("title").not_empty())
+        .with_column("title", col("title").lower())
+        .tokenize(_tok(), (_spec(),))
+        .batched(4)
+        .prefetch(2)
+    )
+    assert ds.validate() == []
+
+
+# -- backstop raises: unreachable via the public API ------------------------
+
+
+def test_streaming_backstops_unreachable_via_public_api():
+    """The four legacy mid-execution raises in stream_batches survive as
+    backstops, but every public-API route now surfaces the analyzer's
+    structured error instead: the exception always carries diagnostics."""
+    for build, terminal in [
+        (_p001_non_json_source, "stream"),
+        (_p002_split_in_stream, "stream"),
+        (_p003_missing_tokenize, "iter"),
+        (_p004_missing_batch, "iter"),
+        (_p005_stacked_partial_dedup, "iter"),
+    ]:
+        with pytest.raises(ValueError) as excinfo:
+            _run_terminal(build(), terminal)
+        err = excinfo.value
+        assert isinstance(err, PlanValidationError), (
+            f"legacy backstop ValueError leaked for {build.__name__}: {err}"
+        )
+        assert err.diagnostics
+
+
+def test_streaming_backstop_still_fires_if_analyzer_bypassed(monkeypatch):
+    """Defense in depth: with the analyzer stubbed out, the original
+    raises still stop a malformed plan from executing."""
+    from repro.analysis import plan_analyzer as PA
+
+    monkeypatch.setattr(PA, "check_streaming_plan", lambda *_a, **_k: [])
+    ds = _p003_missing_tokenize()
+    with pytest.raises(ValueError) as excinfo:
+        next(P.stream_batches(ds.plan, final_schema=ds.schema))
+    assert not isinstance(excinfo.value, PlanValidationError)
+    assert "streaming needs .tokenize" in str(excinfo.value)
+
+
+# -- rewrite verifier -------------------------------------------------------
+
+
+def _frame(ds):
+    return P.split_plan(ds.plan)[0]
+
+
+def test_rewrite_verifier_catches_dropped_filter():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS).where(col("title").not_empty())
+    logical = _frame(ds)
+    tampered = [n for n in logical if not isinstance(n, P.Filter)]
+    diags = verify_rewrite_pair(logical, tampered, ds.schema)
+    assert any(d.code == "P012" for d in diags)
+
+
+def test_rewrite_verifier_catches_lost_final_column():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS)
+    logical = _frame(ds)
+    tampered = list(logical) + [P.Select(("title",))]
+    diags = verify_rewrite_pair(logical, tampered, FIELDS)
+    assert any(d.code == "P011" and "'abstract'" in d.message for d in diags)
+
+
+def test_rewrite_verifier_catches_changed_value_lineage():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS).with_column(
+        "title", col("title").lower()
+    )
+    logical = _frame(ds)
+    tampered = [
+        logical[0],
+        P.Project((("title", col("title").collapse_spaces()),)),
+    ]
+    diags = verify_rewrite_pair(logical, tampered, FIELDS)
+    assert any(d.code == "P013" and "'title'" in d.message for d in diags)
+
+
+def test_rewrite_verifier_catches_dropped_dedup():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS).drop_duplicates(["title"])
+    logical = _frame(ds)
+    tampered = [n for n in logical if not isinstance(n, P.DropDuplicates)]
+    diags = verify_rewrite_pair(logical, tampered, FIELDS)
+    assert any(d.code == "P015" for d in diags)
+
+
+def test_rewrite_verifier_catches_broken_scoping():
+    ds = Dataset.from_json_dirs(["/x"], FIELDS)
+    logical = _frame(ds)
+    tampered = list(logical) + [P.Filter(col("nope").not_empty())]
+    diags = verify_rewrite_pair(logical, tampered, FIELDS)
+    assert any(d.code == "P010" for d in diags)
+
+
+def test_rewrite_verifier_accepts_real_optimizer_output():
+    """The real optimizer's CSE + pushdown on a shared cleaning chain must
+    verify clean — validate() runs this on every terminal."""
+    from repro.core.expr import clean_text
+
+    ds = (
+        Dataset.from_json_dirs(["/x"], FIELDS)
+        .where(clean_text(col("abstract")).word_count() >= 5)
+        .with_column("abstract", clean_text(col("abstract")))
+    )
+    assert [d for d in ds.validate() if d.severity == "error"] == []
+
+
+# -- contract linter --------------------------------------------------------
+
+
+def _write(root: Path, rel: str, text: str) -> None:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(text))
+
+
+def _plant_clean_tree(tmp_path: Path) -> Path:
+    pkg = tmp_path / "fakepkg"
+    _write(tmp_path, "fakepkg/__init__.py", "")
+    _write(tmp_path, "fakepkg/distributed/__init__.py", "")
+    _write(tmp_path, "fakepkg/distributed/worker.py", "import os\n")
+    _write(tmp_path, "fakepkg/distributed/transport.py", "import socket\n")
+    _write(tmp_path, "fakepkg/core/__init__.py", "")
+    _write(tmp_path, "fakepkg/core/bytesops.py", "import re\n")
+    _write(tmp_path, "fakepkg/runtime/__init__.py", "")
+    _write(
+        tmp_path,
+        "fakepkg/runtime/fault_tolerance.py",
+        """\
+        import os
+        import tempfile
+
+        def beat(path):
+            fd, tmp = tempfile.mkstemp(dir=".")
+            with os.fdopen(fd, "w") as f:
+                f.write("x")
+            os.replace(tmp, path)
+        """,
+    )
+    return pkg
+
+
+def test_linter_clean_on_planted_tree(tmp_path):
+    assert lint_contracts(_plant_clean_tree(tmp_path)) == []
+
+
+def test_linter_catches_seeded_r001_violation(tmp_path):
+    """The acceptance-criterion self-test: a transitive module-level jax
+    import planted under the worker tier is caught, with the import chain
+    in the message and file:line provenance."""
+    pkg = _plant_clean_tree(tmp_path)
+    _write(tmp_path, "fakepkg/util.py", "import jax\n")
+    _write(
+        tmp_path,
+        "fakepkg/distributed/worker.py",
+        "from fakepkg import util\n",
+    )
+    diags = lint_contracts(pkg)
+    r001 = [d for d in diags if d.code == "R001"]
+    assert r001, f"seeded R001 violation not caught: {diags}"
+    assert "fakepkg.distributed.worker -> fakepkg.util" in r001[0].message
+    assert any("util.py:1" in line for line in r001[0].provenance)
+
+
+def test_linter_exempts_function_level_jax_import(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    _write(
+        tmp_path,
+        "fakepkg/distributed/worker.py",
+        """\
+        def lazy():
+            import jax
+            return jax
+        """,
+    )
+    assert lint_contracts(pkg) == []
+
+
+def test_linter_catches_r002_fork_side_jax(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    _write(tmp_path, "fakepkg/core/bytesops.py", "import jax\n")
+    diags = lint_contracts(pkg)
+    assert any(d.code == "R002" for d in diags)
+
+
+def test_linter_catches_r003_torn_write(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    _write(
+        tmp_path,
+        "fakepkg/runtime/fault_tolerance.py",
+        """\
+        def beat(path):
+            with open(path, "w") as f:
+                f.write("x")
+        """,
+    )
+    diags = lint_contracts(pkg)
+    r003 = [d for d in diags if d.code == "R003"]
+    assert r003 and "beat()" in r003[0].message
+    assert any("fault_tolerance.py:2" in line for line in r003[0].provenance)
+
+
+def test_linter_catches_r004_bare_except(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    _write(
+        tmp_path,
+        "fakepkg/distributed/worker.py",
+        """\
+        def run():
+            try:
+                pass
+            except:
+                pass
+        """,
+    )
+    diags = lint_contracts(pkg)
+    assert any(d.code == "R004" for d in diags)
+
+
+def test_linter_clean_on_real_tree():
+    """The repo's own package must satisfy its own contracts — the same
+    assertion CI's lint job makes via `python -m repro.analysis`."""
+    root = Path(repro.__file__).parent
+    diags = lint_contracts(root)
+    assert [d for d in diags if d.severity == "error"] == [], "\n".join(
+        d.render() for d in diags
+    )
+
+
+def _run_cli(*args):
+    env = os.environ.copy()
+    src = str(Path(repro.__file__).parents[1])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    clean = _run_cli("--contracts", str(pkg))
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "0 error(s)" in clean.stdout
+
+    _write(tmp_path, "fakepkg/util.py", "import jax\n")
+    _write(
+        tmp_path, "fakepkg/distributed/worker.py", "from fakepkg import util\n"
+    )
+    seeded = _run_cli("--contracts", str(pkg))
+    assert seeded.returncode == 1
+    assert "R001" in seeded.stdout
+
+
+def test_cli_rule_subset(tmp_path):
+    pkg = _plant_clean_tree(tmp_path)
+    _write(tmp_path, "fakepkg/util.py", "import jax\n")
+    _write(
+        tmp_path, "fakepkg/distributed/worker.py", "from fakepkg import util\n"
+    )
+    # R001 excluded from the subset: the seeded violation must not fire.
+    out = _run_cli("--contracts", str(pkg), "--rules", "R003,R004")
+    assert out.returncode == 0, out.stdout + out.stderr
