@@ -24,6 +24,16 @@ row must be present in the fresh run, and every fresh ``fused`` row must
 keep ``speedup_vs_loops >= --min-speedup``. Rows without a gate metric
 (e.g. the pallas row on a TPU-less runner) are informational.
 
+``--mode serve``: gates the serving-latency snapshot
+(``benchmarks/results/serve_latency.json``, written by ``bench_serve``).
+Absolute latency is machine-specific, so the gate checks the
+machine-portable invariants instead: the request ledger must close
+(served + filtered == requests - rejected), p50/p99 must be finite and
+ordered, preprocessing must stay under ``--max-preprocess-frac`` of host
+wall time (the serving analogue of the overlap ceiling: the row program
+must never dominate decode), and the ring cache must keep hitting when
+the baseline run had hits.
+
 Refresh the committed baselines by re-running the benches on the reference
 machine and committing the regenerated files. The tokenize baseline is
 absolute throughput: regenerate it when the CI runner class changes, or
@@ -93,6 +103,58 @@ def check_overlap(args):
     return 0
 
 
+def check_serve(args):
+    baseline = json.loads(Path(args.baseline).read_text())
+    fresh = json.loads(Path(args.fresh).read_text())
+    failures = []
+
+    requests = int(fresh.get("requests", 0))
+    served = int(fresh.get("served", 0))
+    rejected = int(fresh.get("rejected", 0))
+    filtered = int(fresh.get("filtered", 0))
+    if served <= 0:
+        failures.append("zero served requests")
+    if served + filtered != requests - rejected:
+        failures.append(
+            f"request ledger does not close: served {served} + filtered "
+            f"{filtered} != requests {requests} - rejected {rejected}"
+        )
+    if int(fresh.get("tokens_generated", 0)) <= 0:
+        failures.append("zero tokens generated")
+
+    p50 = float(fresh.get("p50_ms", 0.0))
+    p99 = float(fresh.get("p99_ms", 0.0))
+    if not (0.0 < p50 < float("inf")):
+        failures.append(f"p50 {p50} ms is not finite/positive")
+    if p99 < p50:
+        failures.append(f"p99 {p99} ms < p50 {p50} ms")
+
+    frac = float(fresh.get("preprocess_frac", 1.0))
+    if frac > args.max_preprocess_frac:
+        failures.append(
+            f"preprocess fraction {frac:.4f} > ceiling "
+            f"{args.max_preprocess_frac:.4f}"
+        )
+    if int(baseline.get("cache_hits", 0)) > 0 and int(fresh.get("cache_hits", 0)) <= 0:
+        failures.append("ring cache stopped hitting (baseline run had hits)")
+
+    print(
+        f"serve: {served}/{requests} served ({rejected} rejected, "
+        f"{filtered} filtered), p50 {p50:.1f} ms, p99 {p99:.1f} ms, "
+        f"preprocess {100 * frac:.2f}% of host time "
+        f"(ceiling {100 * args.max_preprocess_frac:.0f}%), "
+        f"{fresh.get('cache_hits', 0)} cache hits"
+    )
+    if failures:
+        print()
+        print(f"serve gate failed ({len(failures)} check(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("serve gate passed")
+    return 0
+
+
 def _load_backend_rows(path):
     with open(path, newline="") as fh:
         return {(row["name"], row["backend"]): row for row in csv.DictReader(fh)}
@@ -140,10 +202,11 @@ def main(argv=None):
     ap.add_argument("--fresh", type=Path, required=True)
     ap.add_argument(
         "--mode",
-        choices=["tokenize", "overlap", "kernels"],
+        choices=["tokenize", "overlap", "kernels", "serve"],
         default="tokenize",
         help="tokenize: CSV throughput gate; overlap: device-idle JSON "
-        "gate; kernels: relative bytes-backend speedup gate",
+        "gate; kernels: relative bytes-backend speedup gate; serve: "
+        "serving-latency invariant gate",
     )
     ap.add_argument(
         "--max-regression",
@@ -164,12 +227,21 @@ def main(argv=None):
         help="kernels mode: fail when a non-loops backend's "
         "speedup_vs_loops falls below this",
     )
+    ap.add_argument(
+        "--max-preprocess-frac",
+        type=float,
+        default=0.5,
+        help="serve mode: fail when preprocessing exceeds this fraction "
+        "of host wall time",
+    )
     args = ap.parse_args(argv)
 
     if args.mode == "overlap":
         return check_overlap(args)
     if args.mode == "kernels":
         return check_kernels(args)
+    if args.mode == "serve":
+        return check_serve(args)
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)

@@ -25,6 +25,7 @@ _LAZY = {
     "analyze_plan": "plan_analyzer",
     "infer_schema": "plan_analyzer",
     "check_streaming_plan": "plan_analyzer",
+    "check_row_program_plan": "plan_analyzer",
     "check_transform": "expr_check",
     "check_predicate": "expr_check",
     "verify_plan_rewrites": "rewrites",

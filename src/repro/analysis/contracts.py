@@ -19,6 +19,15 @@ enforced only by docstrings:
 * ``R004`` — no bare ``except:`` in executor/runtime/distributed code
   (it swallows ``KeyboardInterrupt``/``SystemExit`` and turns worker
   shutdown into a hang).
+* ``R005`` — the serve hot path (``runtime.serve_loop`` /
+  ``runtime.row_program``) never imports the shard/shm/pool machinery:
+  ``core.executor``, ``core.async_loader``, ``repro.distributed`` or
+  ``multiprocessing``. A served request must stay a pure per-row
+  compute path — pools, shared memory, and coordinators belong to the
+  training data plane only. Package ``__init__`` re-export hubs are
+  excluded from the traversal (importing ``repro.core.bytesops``
+  executes ``core/__init__`` too, but that is a re-export edge, not
+  machinery *use*); direct imports are what the rule polices.
 
 Everything here is stdlib-only (``ast`` + ``pathlib``): the CLI
 (``python -m repro.analysis --contracts src/repro``) runs in CI's lint
@@ -36,12 +45,19 @@ from typing import Iterator, Sequence
 
 from .diagnostics import Diagnostic
 
-ALL_RULES = ("R001", "R002", "R003", "R004")
+ALL_RULES = ("R001", "R002", "R003", "R004", "R005")
 
 # Module suffixes (relative to the package) whose import closure must be
 # jax-free, per rule.
 _WORKER_TIER_ROOTS = ("distributed.worker", "distributed.transport")
 _FORK_SIDE_ROOTS = ("core.bytesops", "core.executor", "core.pipeline")
+
+# The serve hot path (R005) and the shard/shm/pool machinery it must
+# never reach. Internal names are package-relative prefixes; external
+# names are top-level import bases.
+_SERVE_HOT_ROOTS = ("runtime.serve_loop", "runtime.row_program")
+_SERVE_BANNED_INTERNAL = ("core.executor", "core.async_loader", "distributed")
+_SERVE_BANNED_EXTERNAL = ("multiprocessing",)
 
 # Files whose writes must be atomic (cache + heartbeat surfaces), relative
 # to the package root.
@@ -261,6 +277,68 @@ def _check_atomic_writes(root: Path) -> list[Diagnostic]:
     return diags
 
 
+def _check_serve_hot_path(
+    modules: dict[str, ModuleInfo], pkg: str
+) -> list[Diagnostic]:
+    """R005: walk the module-level import closure of the serve hot path —
+    skipping package ``__init__`` nodes, whose re-export edges would pull
+    in the whole package surface — and flag any import of the shard
+    machinery (direct or transitive through a traversed module)."""
+    roots = [f"{pkg}.{m}" for m in _SERVE_HOT_ROOTS]
+    banned = tuple(f"{pkg}.{m}" for m in _SERVE_BANNED_INTERNAL)
+
+    def is_init(name: str) -> bool:
+        mod = modules.get(name)
+        return mod is not None and mod.path.name == "__init__.py"
+
+    parent: dict[str, str] = {}
+    seen = {r for r in roots if r in modules}
+    queue = list(seen)
+    while queue:
+        cur = queue.pop(0)
+        for dep, _ in modules[cur].internal:
+            if dep not in seen and not is_init(dep):
+                seen.add(dep)
+                parent[dep] = cur
+                queue.append(dep)
+
+    diags: list[Diagnostic] = []
+    flagged: set[tuple[str, str]] = set()
+    for name in sorted(seen):
+        mod = modules[name]
+        chain = [name]
+        while chain[-1] in parent:
+            chain.append(parent[chain[-1]])
+        via = " -> ".join(reversed(chain))
+        for dep, lineno in mod.internal:
+            if not any(dep == b or dep.startswith(b + ".") for b in banned):
+                continue
+            if (name, dep) in flagged:
+                continue
+            flagged.add((name, dep))
+            diags.append(
+                Diagnostic(
+                    "R005",
+                    f"serve hot path imports shard machinery {dep} "
+                    f"(via {via}); per-request serving must stay free of "
+                    "pool/shm/coordinator code",
+                    provenance=(f"{mod.path}:{lineno}",),
+                )
+            )
+        for base in _SERVE_BANNED_EXTERNAL:
+            if base in mod.external and (name, base) not in flagged:
+                flagged.add((name, base))
+                diags.append(
+                    Diagnostic(
+                        "R005",
+                        f"serve hot path imports {base} (via {via}); "
+                        "per-request serving must stay single-process",
+                        provenance=(f"{mod.path}:{mod.external[base]}",),
+                    )
+                )
+    return diags
+
+
 def _check_bare_except(root: Path) -> list[Diagnostic]:
     diags: list[Diagnostic] = []
     files: list[Path] = []
@@ -298,7 +376,7 @@ def lint_contracts(
     pkg = root.name
     active = tuple(rules) if rules else ALL_RULES
     diags: list[Diagnostic] = []
-    if "R001" in active or "R002" in active:
+    if "R001" in active or "R002" in active or "R005" in active:
         modules = build_import_graph(root)
         if "R001" in active:
             diags += _check_jax_free(
@@ -314,6 +392,8 @@ def lint_contracts(
                 "R002",
                 "a fork-side bytes path (core.bytesops/executor/pipeline)",
             )
+        if "R005" in active:
+            diags += _check_serve_hot_path(modules, pkg)
     if "R003" in active:
         diags += _check_atomic_writes(root)
     if "R004" in active:

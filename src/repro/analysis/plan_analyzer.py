@@ -24,6 +24,9 @@ from :mod:`repro.analysis.rewrites`):
 * ``P008`` — invalid Tokenize/Batch/Prefetch configuration
 * ``P009`` — off-grid bucket widths
 * ``P014`` — plan does not start with a source node
+* ``P016`` — plan not row-program-eligible (cross-row / whole-frame steps,
+  non-shard source, or missing ``Tokenize``) — see
+  :func:`check_row_program_plan`
 """
 
 from __future__ import annotations
@@ -351,6 +354,64 @@ def check_streaming_plan(
                     provenance=refs,
                 )
             )
+    return diags
+
+
+def check_row_program_plan(nodes: Sequence[P.PlanNode]) -> list[Diagnostic]:
+    """Row-program eligibility (``Dataset.row_program()``): every step must
+    be executable on a single row in isolation.
+
+    A served request is one row; anything that consults other rows
+    (``drop_duplicates`` — cross-row keep-first state), partitions the
+    whole frame (``split``), or changes batch assembly (``batch`` /
+    ``prefetch`` are simply ignored — they shape training streams, not
+    per-request encoding) cannot be part of the request path. The plan
+    must also start from ``SourceJsonDirs`` (the shard-program compiler's
+    contract — field names come from the source) and carry a ``Tokenize``
+    node, because a row program's output is token arrays.
+    """
+    nodes = list(nodes)
+    diags: list[Diagnostic] = []
+    if not nodes or not isinstance(nodes[0], P.SourceJsonDirs):
+        ref = (node_ref(0, nodes[0]),) if nodes else ()
+        diags.append(
+            Diagnostic(
+                "P016",
+                "row programs require a SourceJsonDirs plan (field names and "
+                "the shard-program compiler both come from the source)",
+                provenance=ref,
+            )
+        )
+    for i, node in enumerate(nodes):
+        ref = (node_ref(i, node),)
+        if isinstance(node, P.DropDuplicates):
+            diags.append(
+                Diagnostic(
+                    "P016",
+                    "drop_duplicates holds cross-row keep-first state; a "
+                    "single served request cannot evaluate it — drop it from "
+                    "the serving chain",
+                    provenance=ref,
+                )
+            )
+        elif isinstance(node, P.Split):
+            diags.append(
+                Diagnostic(
+                    "P016",
+                    "split partitions the whole frame; not row-executable",
+                    provenance=ref,
+                )
+            )
+    if not any(isinstance(n, P.Tokenize) for n in nodes):
+        ref = (node_ref(0, nodes[0]),) if nodes else ()
+        diags.append(
+            Diagnostic(
+                "P016",
+                "row programs encode requests to token arrays; add "
+                ".tokenize(...) to the chain",
+                provenance=ref,
+            )
+        )
     return diags
 
 

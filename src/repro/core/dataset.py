@@ -48,12 +48,13 @@ Execution options are builder verbs too: ``.workers(n)`` sets the default
 parallelism for every terminal (streaming terminals then run shards in
 worker *processes* when ``n > 1`` — see :mod:`repro.core.executor`), and
 ``.cache()`` turns on the on-disk plan-fingerprint shard cache so re-runs
-of an unchanged plan skip cleaning entirely.
+of an unchanged plan skip cleaning entirely. The verbs layer onto the
+``REPRO_*`` environment knobs through one resolution order — explicit verb
+> env > default — owned by :class:`repro.core.engine_config.EngineConfig`.
 """
 
 from __future__ import annotations
 
-import os
 import time
 from collections import Counter
 from pathlib import Path
@@ -66,18 +67,9 @@ from ..data.tokenizer import WordTokenizer
 from . import expr as E
 from . import plan as P
 from .async_loader import AsyncLoader
+from .engine_config import EngineConfig
 from .frame import ColumnarFrame
 from .stages import Stage
-
-
-def _env_cache_dir() -> Path | None:
-    """``REPRO_CACHE`` turns the shard cache on by default (root from
-    ``REPRO_CACHE_DIR`` / tmp); explicit ``.cache(...)`` always wins."""
-    if os.environ.get("REPRO_CACHE", "").strip().lower() in ("1", "true", "yes", "on"):
-        from .executor import default_cache_dir
-
-        return default_cache_dir()
-    return None
 
 
 class Dataset:
@@ -533,26 +525,20 @@ class Dataset:
             raise ValueError(f"unknown bytes backend {name!r}; one of {B.BACKENDS}")
         return self._with_options(backend=name)
 
+    def engine_config(self) -> EngineConfig:
+        """This chain's explicit engine options as an
+        :class:`~repro.core.engine_config.EngineConfig`; its ``resolve_*``
+        methods apply the documented explicit-verb > env > default order."""
+        return EngineConfig.from_options(self._options)
+
     def _resolve_backend(self) -> str | None:
         return self._options.get("backend")
 
     def _resolve_cache_dir(self) -> Path | None:
-        if "cache_dir" in self._options:
-            return self._options["cache_dir"]  # .cache(False) stores None: off
-        return _env_cache_dir()
+        return self.engine_config().resolve_cache_dir()
 
     def _resolve_workers(self, explicit: int | None, default: int = 1) -> int:
-        if explicit is not None:
-            return max(int(explicit), 1)
-        if "workers" in self._options:
-            return self._options["workers"]
-        env = os.environ.get("REPRO_WORKERS")
-        if env:
-            try:
-                return max(int(env), 1)
-            except ValueError:
-                pass
-        return default
+        return self.engine_config().resolve_workers(explicit, default)
 
     # -- plan inspection ---------------------------------------------------
     def validate(
@@ -893,3 +879,56 @@ class Dataset:
                 profiler=profiler,
             )
         return AsyncLoader(it, prefetch=depth, sharding=shard)
+
+    def row_program(self, *, optimize: bool = True):
+        """Terminal: lower this plan to a per-request
+        :class:`~repro.runtime.row_program.RowProgram` for online serving.
+
+        The *same* optimized step chain the shard executors run — compiled
+        by the same :func:`repro.core.executor.compile_shard_program` from
+        the same plan, carrying the same frozen token specs and vocabulary
+        fingerprint — packaged for single-row execution with no
+        shard/pool/shared-memory machinery, so a served request is
+        byte-identical to the training path by construction.
+
+        Requires a tokenized ``SourceJsonDirs`` chain whose steps are all
+        row-local; cross-row plans (``drop_duplicates``, ``split``) raise
+        a :class:`repro.analysis.PlanValidationError` carrying ``P016``
+        diagnostics.
+        """
+        from ..analysis import PlanValidationError, check_row_program_plan
+        from ..runtime.row_program import RowProgram
+        from . import executor as EX
+
+        self._require_valid(streaming=False, optimize=optimize)
+        errors = [
+            d for d in check_row_program_plan(self._nodes) if d.severity == "error"
+        ]
+        if errors:
+            raise PlanValidationError(errors)
+        tok = next(n for n in self._nodes if isinstance(n, P.Tokenize))
+        frame_nodes, _ = P.split_plan(self._nodes)
+        if optimize:
+            frame_nodes = P.optimize_plan(frame_nodes, self._needed_columns())
+        spec_cols = tuple(dict.fromkeys(spec.column for spec in tok.specs))
+        token_plan = EX.TokenPlan(
+            specs=tuple(tok.specs),
+            stoi=dict(tok.tokenizer.stoi),
+            vocab_fp=tok.tokenizer.fingerprint,
+        )
+        program = EX.compile_shard_program(
+            frame_nodes,
+            optimize=optimize,
+            output_columns=spec_cols,
+            tokens=token_plan,
+            backend=self._resolve_backend(),
+        )
+        return RowProgram(
+            fields=program.fields,
+            steps=program.steps,
+            specs=program.tokens.specs,
+            stoi=program.tokens.stoi,
+            vocab_fp=program.tokens.vocab_fp,
+            backend=program.backend,
+            fingerprint=EX.program_fingerprint(program),
+        )

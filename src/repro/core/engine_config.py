@@ -1,0 +1,153 @@
+"""One configuration surface for the execution engine.
+
+Every engine knob used to resolve ad hoc at its point of use —
+``REPRO_EXECUTOR`` inside :func:`repro.core.executor.make_executor`,
+``REPRO_WORKERS`` inside ``Dataset._resolve_workers``, ``REPRO_CACHE`` /
+``REPRO_CACHE_DIR`` in a module-level helper, ``REPRO_BYTES_BACKEND``
+inside :func:`repro.core.bytesops.resolve_backend`, and
+``REPRO_PALLAS_INTERPRET`` inside the Pallas bridge. :class:`EngineConfig`
+is now the single owner of those knobs and of the one resolution order
+they all share:
+
+    explicit argument  >  builder verb (``.workers()/.cache()/.backend()``)
+                       >  environment variable  >  default
+
+``Dataset`` builds an :class:`EngineConfig` from its option dict
+(:meth:`EngineConfig.from_options`), and :func:`make_executor`,
+:func:`compile_shard_program`, the :class:`~repro.core.pipeline.Pipeline`
+adapters, and the serving path (``Dataset.row_program()`` /
+:mod:`repro.runtime.serve_loop`) all resolve through it — no call site
+reads an engine environment variable directly anymore (the Pallas bridge
+keeps its tri-state capability check but names the same
+:data:`ENV_PALLAS_INTERPRET` knob).
+
+The knobs:
+
+=======================  =====================================================
+``REPRO_EXECUTOR``       physical shard executor: ``thread``/``process``/
+                         ``remote`` (empty = auto: processes when workers > 1)
+``REPRO_WORKERS``        default worker count for every terminal
+``REPRO_CACHE``          truthy = enable the on-disk shard cache
+``REPRO_CACHE_DIR``      shard-cache root (with ``REPRO_CACHE`` or
+                         ``.cache(True)``)
+``REPRO_BYTES_BACKEND``  byte-kernel backend: ``loops``/``fused``/``pallas``
+``REPRO_PALLAS_INTERPRET``  force Pallas interpret mode off-TPU
+=======================  =====================================================
+
+This module stays jax-free and import-light (it is pulled in by the
+fork-side ``core.executor`` closure, rule R002).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+ENV_EXECUTOR = "REPRO_EXECUTOR"
+ENV_WORKERS = "REPRO_WORKERS"
+ENV_CACHE = "REPRO_CACHE"
+ENV_CACHE_DIR = "REPRO_CACHE_DIR"
+ENV_BACKEND = "REPRO_BYTES_BACKEND"
+ENV_PALLAS_INTERPRET = "REPRO_PALLAS_INTERPRET"
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+# Sentinel distinguishing "no explicit cache choice" (environment decides)
+# from an explicit ``.cache(False)`` (stored as None: cache off, env ignored).
+_UNSET: Any = object()
+
+EXECUTORS = ("", "thread", "process", "remote")
+
+
+def _env_truthy(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in _TRUTHY
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Explicitly-chosen engine options; ``resolve_*`` methods apply the
+    env-then-default fallback. A field left at its default means "no
+    explicit choice" and falls through to the environment knob."""
+
+    executor: str | None = None
+    workers: int | None = None
+    cache_dir: Path | None = _UNSET
+    backend: str | None = None
+    remote: Any = None
+
+    @classmethod
+    def from_options(cls, options: dict[str, Any]) -> "EngineConfig":
+        """Build from a ``Dataset`` option dict (the builder-verb layer).
+        ``cache_dir`` is tri-state: absent = env decides, None = explicitly
+        off, a path = explicitly on."""
+        return cls(
+            executor=options.get("executor"),
+            workers=options.get("workers"),
+            cache_dir=options["cache_dir"] if "cache_dir" in options else _UNSET,
+            backend=options.get("backend"),
+            remote=options.get("remote"),
+        )
+
+    # -- resolution (explicit > env > default) -----------------------------
+    def resolve_executor(self, explicit: str | None = None) -> str:
+        """``""`` means auto (processes when workers > 1, else threads —
+        :func:`make_executor` applies that last step because it also owns
+        the fallback rules)."""
+        choice = (explicit or self.executor or os.environ.get(ENV_EXECUTOR) or "")
+        choice = choice.strip().lower()
+        if choice not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {choice!r}; use 'thread', 'process' or 'remote'"
+            )
+        return choice
+
+    def resolve_workers(self, explicit: int | None = None, default: int = 1) -> int:
+        if explicit is not None:
+            return max(int(explicit), 1)
+        if self.workers is not None:
+            return max(int(self.workers), 1)
+        env = os.environ.get(ENV_WORKERS)
+        if env:
+            try:
+                return max(int(env), 1)
+            except ValueError:
+                pass
+        return default
+
+    def resolve_cache_dir(self) -> Path | None:
+        """None = shard cache off. Explicit ``.cache(path)`` / ``.cache(False)``
+        beats ``REPRO_CACHE`` (truthy = on, rooted at ``REPRO_CACHE_DIR`` or
+        the system temp dir)."""
+        if self.cache_dir is not _UNSET:
+            return self.cache_dir
+        if _env_truthy(ENV_CACHE):
+            from .executor import default_cache_dir
+
+            return default_cache_dir()
+        return None
+
+    def resolve_backend(self, explicit: str | None = None) -> str:
+        from . import bytesops as B
+
+        return B.resolve_backend(explicit or self.backend)
+
+    @staticmethod
+    def resolve_pallas_interpret() -> bool:
+        """Whether ``REPRO_PALLAS_INTERPRET`` forces interpret-mode Pallas
+        off-TPU (the bridge itself additionally auto-compiles on real TPU —
+        see :func:`repro.kernels.text_clean.ops.scan_flat`)."""
+        return bool(os.environ.get(ENV_PALLAS_INTERPRET))
+
+    def executor_kwargs(
+        self, *, workers: int | None = None, default_workers: int = 1
+    ) -> dict[str, Any]:
+        """The keyword set :func:`repro.core.executor.make_executor` takes,
+        fully resolved — the one spelling every terminal shares."""
+        return dict(
+            workers=self.resolve_workers(workers, default_workers),
+            cache_dir=self.resolve_cache_dir(),
+            executor=self.executor,
+            remote=self.remote,
+        )

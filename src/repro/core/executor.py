@@ -37,8 +37,9 @@ This module supplies both behind the planner:
   of the cleaned-text entries, and a shard whose token products are fully
   cached skips parsing and cleaning altogether.
 
-Executor selection honors ``REPRO_EXECUTOR`` (``thread`` | ``process``)
-and the cache root honors ``REPRO_CACHE_DIR``.
+Executor selection, worker counts, cache roots, and bytes backends all
+resolve through :class:`repro.core.engine_config.EngineConfig` (explicit
+argument > builder verb > ``REPRO_*`` env knob > default).
 """
 
 from __future__ import annotations
@@ -65,6 +66,7 @@ from . import expr as E
 from . import ingest as ing
 from ..data.batching import TokenSpec, VocabTable, encode_flat, encode_rows
 from .async_loader import ShardPool
+from .engine_config import EngineConfig
 from .frame import ColumnarFrame
 
 # Vocabulary lookup tables are pure functions of the vocabulary (keyed by
@@ -233,7 +235,7 @@ def compile_shard_program(
         tuple(output_columns),
         tokens=tokens,
         count_words=tuple(count_words),
-        backend=B.resolve_backend(backend),
+        backend=EngineConfig().resolve_backend(backend),
     )
 
 
@@ -1844,12 +1846,7 @@ def make_executor(
     process executor it falls back to threads for cross-shard dedup
     programs and unpicklable programs.
     """
-    choice = executor or os.environ.get("REPRO_EXECUTOR") or ""
-    choice = choice.strip().lower()
-    if choice not in ("", "thread", "process", "remote"):
-        raise ValueError(
-            f"unknown executor {choice!r}; use 'thread', 'process' or 'remote'"
-        )
+    choice = EngineConfig(executor=executor).resolve_executor()
     explicit = bool(choice)
     if not choice:
         choice = "process" if workers > 1 else "thread"

@@ -39,6 +39,7 @@ from typing import Sequence
 import numpy as np
 
 from . import bytesops as B
+from .engine_config import EngineConfig
 from .frame import ColumnarFrame
 from .stages import Stage
 
@@ -68,9 +69,9 @@ def _split_on_rows(buf: np.ndarray, k: int) -> list[np.ndarray]:
 
 
 def _run_ops(args) -> np.ndarray:
-    """Pool task: ``(ops, buf)`` or ``(ops, buf, backend)``; a missing or
-    None backend resolves from ``REPRO_BYTES_BACKEND`` inside the worker
-    (the pool inherits the env, so whole-frame runs honor it too)."""
+    """Pool task: ``(ops, buf)`` or ``(ops, buf, backend)``. The driver
+    resolves the backend through :class:`EngineConfig` before fan-out, so
+    every chunk of a run uses the same backend regardless of worker env."""
     ops, buf = args[0], args[1]
     backend = args[2] if len(args) > 2 else None
     return B.execute_ops(buf, ops, backend)
@@ -108,10 +109,14 @@ def compile_column_plans(
 
 
 def run_column_plans(
-    frame: ColumnarFrame, plans: Sequence[ColumnPlan], workers: int = 1
+    frame: ColumnarFrame,
+    plans: Sequence[ColumnPlan],
+    workers: int = 1,
+    backend: str | None = None,
 ) -> ColumnarFrame:
     """Physical executor: flatten each input column once, run its fused op
     chain (optionally fanned out over a process pool), unflatten once."""
+    backend = EngineConfig(backend=backend).resolve_backend()
     bufs: dict[str, np.ndarray] = {}
     out = frame
     pool = ProcessPoolExecutor(max_workers=workers) if workers > 1 else None
@@ -121,10 +126,10 @@ def run_column_plans(
             if src is None:
                 src = frame.flat(in_col)
             if pool is None:
-                res = _run_ops((ops, src))
+                res = _run_ops((ops, src, backend))
             else:
                 chunks = _split_on_rows(src, workers)
-                parts = list(pool.map(_run_ops, [(ops, c) for c in chunks]))
+                parts = list(pool.map(_run_ops, [(ops, c, backend) for c in chunks]))
                 res = np.concatenate(parts) if parts else src
             bufs[out_col] = res
             out = out.ensure_column(out_col).with_flat(out_col, res)
@@ -142,9 +147,15 @@ class PipelineModel:
         return compile_column_plans(self.stages, optimize)
 
     def transform(
-        self, frame: ColumnarFrame, workers: int = 1, optimize: bool = True
+        self,
+        frame: ColumnarFrame,
+        workers: int = 1,
+        optimize: bool = True,
+        backend: str | None = None,
     ) -> ColumnarFrame:
-        return run_column_plans(frame, self.column_plans(optimize), workers)
+        return run_column_plans(
+            frame, self.column_plans(optimize), workers, backend=backend
+        )
 
 
 def default_workers() -> int:

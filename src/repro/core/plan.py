@@ -38,6 +38,7 @@ not just the cleaning segment:
 from __future__ import annotations
 
 import hashlib
+import heapq
 import time
 from dataclasses import dataclass
 from pathlib import Path
@@ -894,8 +895,11 @@ def stream_batches(
 
     Preprocessing of shard k+1 overlaps consumption of shard k, so when the
     resulting iterator feeds an AsyncLoader the host pipeline runs fully
-    concurrent with device compute. Records match whole-frame execution as a
-    multiset (shard arrival order is nondeterministic under work stealing).
+    concurrent with device compute. Shard results complete in work-stealing
+    order but are reassembled in *shard* order on the driver (a small heap,
+    bounded by the in-flight shard count), so the batch stream is
+    deterministic run-to-run and across executors; records additionally
+    match whole-frame execution as a multiset.
     Full-subset dedup keeps that guarantee directly — duplicate rows are
     interchangeable. A *partial*-subset drop_duplicates (where the variant
     that survives matters) streams via the two-pass canonical-survivor
@@ -1011,8 +1015,22 @@ def stream_batches(
         )
 
         def chunks() -> Iterator[dict[str, np.ndarray]]:
+            # Reassemble completion-ordered results in *shard* order via a
+            # small heap (bounded by in-flight shards ≈ workers), so the
+            # downstream bucketing/batching sees a deterministic row stream
+            # and iter_batches is reproducible run-to-run regardless of
+            # executor choice or work-stealing schedule.
+            heap: list[tuple[int, int, dict[str, np.ndarray]]] = []
+            seq = 0  # tiebreak: dict payloads are not comparable
+            next_idx = 0
             for res in exec_:
-                yield res.tokens
+                heapq.heappush(heap, (res.shard_index, seq, res.tokens))
+                seq += 1
+                while heap and heap[0][0] == next_idx:
+                    yield heapq.heappop(heap)[2]
+                    next_idx += 1
+            while heap:  # defensive: drain any gap in shard indexes
+                yield heapq.heappop(heap)[2]
 
         rng = np.random.default_rng(batch.seed + epoch)
         buffer = shuffle_buffer or max(8 * batch.batch_size, 1024)

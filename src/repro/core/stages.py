@@ -31,6 +31,8 @@ Spark APIs it reuses (``Tokenizer``, ``StopWordsRemover``).
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from . import bytesops as B
@@ -43,6 +45,13 @@ class Stage:
     see module docstring; behavior is defined by :meth:`to_expr`)."""
 
     def __init__(self, input_col: str, output_col: str | None = None):
+        warnings.warn(
+            f"{type(self).__name__} is a deprecated shim over the column "
+            "expression IR and will be removed; compose col() expressions "
+            "instead (see repro.core.expr and the README migration table)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.input_col = input_col
         self.output_col = output_col or input_col
 

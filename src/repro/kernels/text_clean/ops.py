@@ -82,6 +82,8 @@ def clean_rows(
 # past 64 MiB — the host scan is cheaper than that much padding traffic.
 _MAX_PAD_BYTES = 64 << 20
 _MAX_BLOWUP = 8.0
+# Same knob as repro.core.engine_config.ENV_PALLAS_INTERPRET; read directly
+# here to keep this bridge importable without the core engine layer.
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 
